@@ -1,0 +1,36 @@
+"""Shared benchmark graph suite (CPU-scale stand-ins for the paper's
+OK/TW/FS/CW/HL inputs) + reporting helpers."""
+from __future__ import annotations
+
+import time
+
+from repro.graph import generators as gen
+
+# name -> constructor (moderate sizes: every bench finishes on 1 CPU core)
+GRAPHS = {
+    "rmat14": lambda: gen.rmat(14, 8.0, seed=1),       # social-like, skewed
+    "rmat12": lambda: gen.rmat(12, 16.0, seed=2),      # denser
+    "er13": lambda: gen.erdos_renyi(8192, 6.0, seed=3),
+    "grid": lambda: gen.grid2d(90, 90),                # high diameter
+}
+
+# 1-vs-2-cycle sizes: the AMPC walk is a vmapped while_loop, so wall time on
+# the 1-core CPU host is bounded by the longest inter-sample gap; 50k keeps
+# the full benchmark run under a few minutes while preserving the scaling
+# trend (the paper's 2e8-2e10 sizes are datacenter-scale).
+CYCLES = {"2x2e3": 2_000, "2x1e4": 10_000, "2x5e4": 50_000}
+
+
+def timed(fn, *args, **kw):
+    t0 = time.perf_counter()
+    out = fn(*args, **kw)
+    return out, time.perf_counter() - t0
+
+
+def fmt_table(headers, rows) -> str:
+    widths = [max(len(str(h)), *(len(str(r[i])) for r in rows))
+              for i, h in enumerate(headers)]
+    def line(cells):
+        return " | ".join(str(c).ljust(w) for c, w in zip(cells, widths))
+    sep = "-+-".join("-" * w for w in widths)
+    return "\n".join([line(headers), sep] + [line(r) for r in rows])

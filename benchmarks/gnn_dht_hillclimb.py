@@ -1,0 +1,150 @@
+"""§Perf hillclimb 3 (paper-representative): GNN message passing as an AMPC
+DHT query wave.
+
+Baseline: ``out = segment_sum(take(h, senders), receivers)`` with node/edge
+arrays sharded over the flat mesh — XLA emits global gathers/scatters whose
+wire bytes scale with E (every edge crosses the fabric).
+
+DHT variant (the paper's technique applied as an optimization): edges are
+placed receiver-aligned (each device owns the edges pointing at its node
+range — a preprocessing shuffle, exactly the paper's "SortGraph" round), the
+sender-feature fetch becomes a dedup'd routed lookup (core.dht.routed_lookup
+= the caching optimization of Section 5.3 + all_to_all), and the
+segment-sum is device-local.  Wire bytes scale with the number of *distinct*
+remote senders per device — on power-law graphs a 2-10x reduction (the same
+hub-caching effect Fig 4 measures).
+
+Two measurements:
+  A) static collective bytes on the production mesh (dry-run lower+compile)
+     for both variants at ogb_products scale (capacity sized by the
+     empirically measured dedup factor);
+  B) empirical dedup factor + overflow safety on a real RMAT graph executed
+     on an 8-device CPU mesh.
+"""
+from __future__ import annotations
+
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+
+MEASURE_B = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import numpy as np, jax, jax.numpy as jnp
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    from repro.graph import generators as gen
+    from repro.core import dht
+
+    g = gen.rmat(14, 32.0, seed=0)          # power-law, avg deg ~32
+    s, r, _, _ = g.symmetric()
+    order = np.argsort(r)                    # receiver-aligned placement
+    s, r = s[order], r[order]
+    P_dev = 8
+    n = ((g.n + P_dev - 1) // P_dev) * P_dev
+    E = (len(s) // P_dev) * P_dev
+    s, r = s[:E], r[:E]
+    mesh = jax.make_mesh((P_dev,), ("x",))
+    vals = jax.device_put(jnp.zeros((n, 8), jnp.float32),
+                          NamedSharding(mesh, P("x", None)))
+    keys = jax.device_put(jnp.asarray(s), NamedSharding(mesh, P("x")))
+    # per-device dedup factor: edges per device / distinct senders per device
+    per = E // P_dev
+    facs, remote = [], []
+    for d in range(P_dev):
+        sd = s[d*per:(d+1)*per]
+        facs.append(per / max(len(np.unique(sd)), 1))
+        owner = np.unique(sd) // (n // P_dev)
+        remote.append((owner != d).mean())
+    out, n_unique, overflow = dht.routed_lookup(vals, keys, mesh, "x")
+    print(f"DEDUP_FACTOR {np.mean(facs):.2f}")
+    print(f"REMOTE_FRAC {np.mean(remote):.2f}")
+    print(f"OVERFLOW {int(overflow)}")
+""")
+
+
+def run():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src"
+    env.pop("XLA_FLAGS", None)
+    rb = subprocess.run([sys.executable, "-c", MEASURE_B], env=env,
+                        capture_output=True, text=True, timeout=900)
+    print("-- measurement B (8-device execution, RMAT deg~32) --")
+    print(rb.stdout.strip())
+    assert rb.returncode == 0, rb.stderr[-1500:]
+    dedup = float(rb.stdout.split("DEDUP_FACTOR")[1].split()[0])
+
+    # A) static analysis at ogb_products scale. GNN jobs view the fabric as
+    # one flat 512-device axis (pure DP over segments), so the router uses a
+    # single named axis.
+    code = textwrap.dedent(f"""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+        import numpy as np, jax, jax.numpy as jnp, functools
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        from jax.experimental.shard_map import shard_map
+        from repro.launch.hlo import analyze_hlo
+        from repro.core import dht
+
+        mesh = jax.make_mesh((512,), ("nodes",))
+        chips = 512
+        N, E, C = 2449408, 123718656, 128
+        S = jax.ShapeDtypeStruct
+        flat1 = NamedSharding(mesh, P("nodes"))
+        flat2 = NamedSharding(mesh, P("nodes", None))
+
+        def baseline(h, senders, receivers):
+            msg = jnp.take(h, senders, axis=0)
+            return jax.ops.segment_sum(msg, receivers, num_segments=N)
+
+        low = jax.jit(baseline, in_shardings=(flat2, flat1, flat1),
+                      out_shardings=flat2).lower(
+            S((N, C), jnp.float32), S((E,), jnp.int32), S((E,), jnp.int32))
+        a = analyze_hlo(low.compile().as_text())
+        print(f"BASELINE_WIRE {{a.collectives.wire_bytes:.4g}}")
+
+        # DHT variant: receiver-aligned edges; per-destination capacity
+        # sized by the measured dedup factor ({dedup:.2f}x, 1.5x margin)
+        E_loc = E // chips
+        uniq_est = int(E_loc / {dedup:.2f} * 1.5)
+        cap_dest = max(uniq_est // chips * 6, 64)   # 6x skew headroom
+
+        def dht_variant(h, senders, receivers):
+            fetched, n_unique, overflow = dht.routed_lookup(
+                h, senders, mesh, "nodes", capacity=cap_dest)
+            # receiver-aligned edges => the segment-sum is device-local
+            def local_sum(msg_l, r_l):
+                base = r_l.min()
+                return jax.ops.segment_sum(msg_l, r_l - base,
+                                           num_segments=N // chips)
+            out = shard_map(local_sum, mesh=mesh,
+                            in_specs=(P("nodes", None), P("nodes")),
+                            out_specs=P("nodes", None),
+                            check_rep=False)(fetched, receivers)
+            return out, overflow
+
+        low2 = jax.jit(dht_variant, in_shardings=(flat2, flat1, flat1),
+                       out_shardings=(flat2, None)).lower(
+            S((N, C), jnp.float32), S((E,), jnp.int32), S((E,), jnp.int32))
+        a2 = analyze_hlo(low2.compile().as_text())
+        print(f"DHT_WIRE {{a2.collectives.wire_bytes:.4g}}")
+        print(f"CAP {{cap_dest}} E_LOC {{E_loc}}")
+    """)
+    ra = subprocess.run([sys.executable, "-c", code], env=env,
+                        capture_output=True, text=True, timeout=1800)
+    print("\n-- measurement A (static, production mesh, ogb_products scale) --")
+    print(ra.stdout.strip())
+    if ra.returncode != 0:
+        print(ra.stderr[-1500:])
+        return {"error": "static analysis failed", "dedup": dedup}
+    base = float(ra.stdout.split("BASELINE_WIRE")[1].split()[0])
+    dhtw = float(ra.stdout.split("DHT_WIRE")[1].split()[0])
+    print(f"\nwire bytes/device: baseline {base:.3g} -> dht {dhtw:.3g} "
+          f"({base/max(dhtw,1):.1f}x reduction; measured dedup {dedup:.2f}x)")
+    return {"baseline_wire": base, "dht_wire": dhtw, "dedup": dedup}
+
+
+if __name__ == "__main__":
+    run()

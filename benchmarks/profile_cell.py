@@ -1,0 +1,61 @@
+"""Hillclimb profiler: lower one cell, attribute FLOPs/bytes/collectives.
+
+  PYTHONPATH=src python -m benchmarks.profile_cell --arch qwen2.5-32b \
+      --shape train_4k
+"""
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("_EXTRA_XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=512").strip()
+
+import argparse
+import json
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--multi", action="store_true")
+    ap.add_argument("--save-hlo", default="")
+    ap.add_argument("--set", action="append", default=[],
+                    help="config override key=value (int/bool/str)")
+    args = ap.parse_args()
+    overrides = {}
+    for kv in args.set:
+        k, v = kv.split("=", 1)
+        if v in ("True", "False"):
+            overrides[k] = v == "True"
+        else:
+            try:
+                overrides[k] = int(v)
+            except ValueError:
+                overrides[k] = v
+
+    from repro.launch.mesh import make_production_mesh, n_chips
+    from repro.launch.specs import build_lowerable
+    from repro.launch.hlo import analyze_hlo, roofline_terms
+
+    mesh = make_production_mesh(multi_pod=args.multi)
+    low = build_lowerable(args.arch, args.shape, mesh,
+                          overrides=overrides or None)
+    compiled = low.lower(mesh).compile()
+    txt = compiled.as_text()
+    if args.save_hlo:
+        open(args.save_hlo, "w").write(txt)
+    a = analyze_hlo(txt)
+    terms = roofline_terms(a, n_chips(mesh), low.model_flops)
+    print(json.dumps({k: v for k, v in terms.items()
+                      if not isinstance(v, dict)}, indent=1, default=str))
+    print("\n-- top byte ops (per-device bytes) --")
+    for op, b in a.top_byte_ops():
+        print(f"  {b:12.4g}  {op}")
+    print("\n-- top collective sites (per-device wire bytes) --")
+    for site, b in a.top_collective_sites():
+        print(f"  {b:12.4g}  {site}")
+    mem = compiled.memory_analysis()
+    print(f"\nmemory: args={mem.argument_size_in_bytes/1e9:.2f}GB "
+          f"temp={mem.temp_size_in_bytes/1e9:.2f}GB")
+
+
+if __name__ == "__main__":
+    main()

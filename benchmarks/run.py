@@ -1,0 +1,48 @@
+"""Benchmark harness entry point:  PYTHONPATH=src python -m benchmarks.run
+
+Runs one benchmark per paper table/figure and the roofline report.
+Use --quick for the reduced graph set, --only <name> for a single bench.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+BENCHES = ["table3_rounds", "bytes_comm", "mis_caching", "runtimes",
+           "msf_queries", "gnn_dht_hillclimb", "roofline"]
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", choices=BENCHES)
+    ap.add_argument("--quick", action="store_true")
+    args = ap.parse_args()
+    selected = [args.only] if args.only else BENCHES
+    results = {}
+    for name in selected:
+        print(f"\n{'='*72}\n== {name}\n{'='*72}", flush=True)
+        mod = __import__(f"benchmarks.{name}", fromlist=["run"])
+        t0 = time.time()
+        kw = {}
+        if args.quick and name in ("table3_rounds", "bytes_comm",
+                                   "mis_caching", "runtimes"):
+            kw = {"graph_names": ["rmat12", "er13"]}
+        if args.quick and name == "runtimes":
+            kw["cycles"] = {"2x2e3": 2000}
+        if args.quick and name == "msf_queries":
+            kw = {"log2_sizes": (10, 12)}
+        try:
+            results[name] = mod.run(**kw)
+            print(f"[{name} done in {time.time()-t0:.1f}s]")
+        except Exception as e:  # noqa: BLE001
+            print(f"[{name} FAILED: {e}]")
+            results[name] = {"error": str(e)}
+    failed = [k for k, v in results.items() if "error" in v]
+    print(f"\n{'='*72}\n{len(selected)-len(failed)}/{len(selected)} "
+          f"benchmarks succeeded" + (f"; FAILED: {failed}" if failed else ""))
+    return 0 if not failed else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,60 @@
+"""Quickstart: the paper's four algorithms on a social-network-like graph,
+with the AMPC-vs-MPC round/byte accounting (Table 3 in miniature).
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+import numpy as np
+
+from repro.graph import generators as gen
+from repro.core import connectivity as cc, matching as mm, mis, msf, \
+    one_vs_two as ovt, oracle
+from repro.core.rounds import RoundLedger
+
+
+def main():
+    g = gen.rmat(12, 8.0, seed=0)
+    print(f"graph: n={g.n} m={g.m} (RMAT, power-law)")
+
+    # --- MIS
+    la, lm = RoundLedger("ampc"), RoundLedger("mpc")
+    s_a, st = mis.mis_ampc(g, seed=0, ledger=la)
+    s_m, _ = mis.mis_mpc_rootset(g, seed=0, ledger=lm)
+    assert np.array_equal(s_a, s_m), "same randomness => same MIS"
+    print(f"\nMIS: |I|={s_a.sum()}  AMPC shuffles={la.shuffles} "
+          f"(cache saved {st['cache_savings_factor']:.1f}x queries)  "
+          f"MPC shuffles={lm.shuffles}")
+
+    # --- Maximal matching
+    la, lm = RoundLedger("ampc"), RoundLedger("mpc")
+    m_a, st = mm.mm_ampc(g, seed=0, ledger=la)
+    print(f"MM : |M|={m_a.sum()}  AMPC shuffles={la.shuffles}  "
+          f"maximal={oracle.is_maximal_matching(g, m_a)}")
+
+    # --- MSF (degree weights, Section 5.2)
+    gw = g.with_degree_weights()
+    la, lm = RoundLedger("ampc"), RoundLedger("mpc")
+    f_a, st = msf.msf_ampc(gw, seed=0, ledger=la,
+                           skip_ternarize_if_dense=False)
+    f_m, stm = msf.msf_mpc_boruvka(gw, seed=0, ledger=lm)
+    print(f"MSF: weight={gw.weights[f_a].sum():.0f}  AMPC shuffles="
+          f"{la.shuffles} (queries/vertex={st['avg_queries_per_vertex']:.1f})"
+          f"  MPC shuffles={lm.shuffles} ({stm['phases']} Borůvka phases)")
+
+    # --- 1-vs-2 cycle
+    for name, cyc, expect in [("one", gen.one_cycle(20000), 1),
+                              ("two", gen.two_cycles(10000), 2)]:
+        la = RoundLedger("ampc")
+        n_a, st = ovt.one_vs_two_ampc(cyc, p=1 / 64, seed=0, ledger=la)
+        n_m, stm = ovt.one_vs_two_mpc(cyc, seed=0)
+        print(f"1v2c({name}): AMPC says {n_a} in {la.shuffles} shuffles; "
+              f"MPC says {n_m} in {3 * stm['phases']} shuffles")
+        assert n_a == n_m == expect
+
+    # --- connectivity
+    parts = gen.disjoint_components([3000, 2000, 1000], 4.0, seed=1)
+    labels, st = cc.cc_ampc(parts, seed=0)
+    print(f"CC : {st['num_components']} components (expected 3)")
+
+
+if __name__ == "__main__":
+    main()

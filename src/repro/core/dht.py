@@ -1,0 +1,166 @@
+"""Distributed hash table (DHT) — the AMPC primitive, in JAX.
+
+The paper's DHT stores the previous round's output as key-value pairs with
+integer keys known to all machines.  On TPU the faithful realization is a
+*device-sharded dense array* indexed by key: a lookup is a (collective)
+gather.  Two execution paths:
+
+  * ``lookup``        — plain ``jnp.take``; under pjit XLA partitions it into
+                        the appropriate all-gather / gather-scatter pattern.
+  * ``routed_lookup`` — explicit ``shard_map`` router: keys are deduped
+                        ("caching", Section 5.3 of the paper), bucketed by
+                        owner shard, exchanged with ``all_to_all``, answered
+                        locally, and routed back.  This is the collective
+                        schedule an RDMA KV store replaces, and it is what the
+                        multi-pod dry-run exercises.
+
+Both support the *caching optimization*: sort-dedup of the key batch before
+fetching.  ``dedup_savings`` (queries avoided) is returned so benchmarks can
+reproduce the paper's Figure 4 measurement.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
+from jax.sharding import PartitionSpec as P
+
+INT_MAX = jnp.iinfo(jnp.int32).max
+
+
+def dedup_keys(keys: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Sort-dedup a key batch (the paper's per-machine caching).
+
+    Returns (uniq, inv, n_unique):
+      uniq  — (K,) sorted unique keys first, INT_MAX padding after;
+      inv   — (K,) position of each original key inside ``uniq``;
+      n_unique — scalar count of distinct keys.
+    Negative keys are treated as invalid (padding) and map to INT_MAX.
+    """
+    keys = jnp.asarray(keys, jnp.int32)
+    safe = jnp.where(keys < 0, INT_MAX, keys)
+    sk = jnp.sort(safe)
+    first = jnp.concatenate([jnp.ones((1,), bool), sk[1:] != sk[:-1]])
+    first = first & (sk != INT_MAX)
+    uniq = jnp.where(first, sk, INT_MAX)
+    uniq = jnp.sort(uniq)
+    n_unique = first.sum()
+    inv = jnp.searchsorted(uniq, safe).astype(jnp.int32)
+    return uniq, inv, n_unique
+
+
+def lookup(values: jnp.ndarray, keys: jnp.ndarray, dedup: bool = True):
+    """Gather ``values[keys]`` with optional dedup caching.
+
+    Invalid (negative) keys return row 0 — callers mask them.
+    Returns (gathered, n_unique_queries).
+    """
+    keys = jnp.asarray(keys, jnp.int32)
+    if not dedup:
+        safe = jnp.clip(keys, 0, values.shape[0] - 1)
+        return jnp.take(values, safe, axis=0), jnp.asarray(keys.size, jnp.int32)
+    uniq, inv, n_unique = dedup_keys(keys)
+    safe = jnp.clip(jnp.where(uniq == INT_MAX, 0, uniq), 0, values.shape[0] - 1)
+    fetched = jnp.take(values, safe, axis=0)
+    return jnp.take(fetched, inv, axis=0), n_unique
+
+
+def _owner(keys: jnp.ndarray, shard_size: int) -> jnp.ndarray:
+    return jnp.where(keys == INT_MAX, INT_MAX, keys // shard_size)
+
+
+def routed_lookup(values, keys, mesh, axis_name: str, capacity: int | None = None,
+                  dedup: bool = True):
+    """Explicit DHT router: dedup -> bucket by owner -> all_to_all -> answer
+    -> all_to_all back -> un-dedup.
+
+    ``values``: (n, ...) array sharded over ``axis_name`` (contiguous rows).
+    ``keys``:   (Q,) int32, sharded over ``axis_name``; -1 = padding.
+    ``capacity``: per-destination slots per device (static). Overflowing keys
+    (beyond capacity for one owner) fall back to an unanswered marker; callers
+    size capacity >= local Q for exactness (the default).
+    Returns (gathered(Q, ...), n_unique, overflow_count).
+    """
+    n_shards = mesh.shape[axis_name]
+    n = values.shape[0]
+    assert n % n_shards == 0, "value rows must divide evenly across shards"
+    shard_size = n // n_shards
+    q_local = keys.shape[0] // n_shards
+    cap = capacity or q_local
+
+    def body(vals_l, keys_l):
+        # vals_l: (shard_size, ...), keys_l: (q_local,)
+        me = jax.lax.axis_index(axis_name)
+        base = me * shard_size
+        if dedup:
+            uniq, inv, n_unique = dedup_keys(keys_l)
+        else:
+            uniq = jnp.where(keys_l < 0, INT_MAX, keys_l)
+            inv = jnp.arange(q_local, dtype=jnp.int32)
+            n_unique = (keys_l >= 0).sum()
+        own = _owner(uniq, shard_size)
+        order = jnp.argsort(own)
+        sk = uniq[order]                       # keys sorted by owner
+        so = _owner(sk, shard_size)
+        # slot within destination bucket
+        start = jnp.searchsorted(so, jnp.arange(n_shards, dtype=jnp.int32))
+        slot = jnp.arange(sk.shape[0]) - jnp.take(start, jnp.clip(so, 0, n_shards - 1))
+        valid = (sk != INT_MAX) & (slot < cap)
+        overflow = ((sk != INT_MAX) & (slot >= cap)).sum()
+        # scatter into (n_shards, cap) send buffer
+        flat_pos = jnp.where(valid, so * cap + slot, n_shards * cap)
+        send = jnp.full((n_shards * cap + 1,), INT_MAX, jnp.int32)
+        send = send.at[flat_pos].set(jnp.where(valid, sk, INT_MAX))
+        send = send[:-1].reshape(n_shards, cap)
+        # exchange keys: row d of `recv` = keys sent to me by device d
+        recv = jax.lax.all_to_all(send, axis_name, 0, 0, tiled=False)
+        # answer locally
+        rk = recv.reshape(-1)
+        local_idx = jnp.clip(jnp.where(rk == INT_MAX, 0, rk - base), 0, shard_size - 1)
+        ans = jnp.take(vals_l, local_idx, axis=0)
+        ans = jnp.where((rk == INT_MAX)[(...,) + (None,) * (ans.ndim - 1)], 0, ans)
+        ans = ans.reshape((n_shards, cap) + ans.shape[1:])
+        # route answers back
+        back = jax.lax.all_to_all(ans, axis_name, 0, 0, tiled=False)
+        back = back.reshape((n_shards * cap,) + back.shape[2:])
+        # un-permute: sorted-by-owner position -> uniq position -> original
+        uniq_vals = jnp.zeros((sk.shape[0],) + back.shape[1:], back.dtype)
+        got = jnp.where(valid, jnp.arange(sk.shape[0]), 0)
+        src = jnp.take(back, jnp.where(valid, flat_pos, 0), axis=0)
+        uniq_vals = uniq_vals.at[order].set(
+            jnp.where(valid[(...,) + (None,) * (src.ndim - 1)], src, 0))
+        del got
+        out = jnp.take(uniq_vals, inv, axis=0)
+        return out, n_unique[None], overflow[None]
+
+    spec_v = P(axis_name) if values.ndim == 1 else P(axis_name, *([None] * (values.ndim - 1)))
+    out_spec = P(axis_name) if values.ndim == 1 else P(axis_name, *([None] * (values.ndim - 1)))
+    fn = shard_map(body, mesh=mesh,
+                   in_specs=(spec_v, P(axis_name)),
+                   out_specs=(out_spec, P(axis_name), P(axis_name)),
+                   check_rep=False)
+    out, n_unique, overflow = fn(values, keys)
+    return out, n_unique.sum(), overflow.sum()
+
+
+class ShardedDHT:
+    """Host-level convenience wrapper with ledger accounting."""
+
+    def __init__(self, values: jnp.ndarray, ledger=None, value_bytes: int | None = None):
+        self.values = values
+        self.ledger = ledger
+        self._row_bytes = value_bytes or int(
+            values.dtype.itemsize * (values.size // max(values.shape[0], 1)))
+
+    def lookup(self, keys, dedup: bool = True):
+        out, n_unique = lookup(self.values, keys, dedup=dedup)
+        if self.ledger is not None:
+            nu = int(jax.device_get(n_unique))
+            total = int(keys.size)
+            self.ledger.record_queries(
+                nu, nu * (self._row_bytes + 4), waves=1,
+                deduped_away=(total - nu) if dedup else 0)
+        return out

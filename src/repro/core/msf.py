@@ -1,0 +1,367 @@
+"""Minimum spanning forest in constant adaptive rounds (paper Section 3).
+
+Pieces:
+  * ``truncated_prim``  — Algorithm 1: per-vertex rank-truncated Prim search,
+    vmapped over all vertices (each vertex = one AMPC "machine task"); three
+    stopping conditions (budget, exhaustion, lower-rank hook).
+  * ``pointer_jump``    — Proposition 3.2 forest contraction (in-round
+    doubling on the immutable hook snapshot).
+  * ``contract_edges``  — relabel + self-loop removal + min-weight dedup.
+  * ``boruvka_inround`` — DenseMSF stand-in: Borůvka hook-and-contract run
+    entirely inside one launch (AMPC adaptivity), used for the dense phase.
+  * ``msf_ampc``        — Algorithm 2 driver (5 materialized shuffles, matching
+    the paper's Table 3 accounting: SortGraph, PrimSearch, PointerJump,
+    Contract, DenseMSF).
+  * ``msf_mpc_boruvka`` — the paper's MPC baseline (red/blue Borůvka,
+    3 shuffles per phase, O(log n) phases).
+
+All functions return a boolean mask over the *original* edge ids.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..graph.coo import UGraph
+from .rounds import RoundLedger, nbytes_of
+from .ternarize import ternarize
+
+INF = jnp.float32(jnp.inf)
+
+
+# --------------------------------------------------------------------------
+# Algorithm 1: truncated Prim
+# --------------------------------------------------------------------------
+@functools.partial(jax.jit, static_argnames=("budget",))
+def truncated_prim(nbr, nbw, nbe, rank, budget: int):
+    """Run rank-truncated Prim from every vertex of a Δ<=3 graph.
+
+    nbr/nbw/nbe: (n, D) padded adjacency (ids / weights / edge ids), -1 / inf pad.
+    rank: (n,) distinct float ranks (the random permutation π).
+    Returns (out_eids (n, budget), hooks (n,), cases (n,), queries (n,)).
+    cases: 1 = budget hit, 2 = component exhausted, 3 = lower-rank hook.
+    """
+    n, D = nbr.shape
+    F = D * budget  # frontier capacity
+
+    def per_vertex(v):
+        visited = jnp.full((budget,), -1, jnp.int32).at[0].set(v)
+        fdst = jnp.full((F,), -1, jnp.int32).at[:D].set(nbr[v])
+        fw = jnp.full((F,), INF).at[:D].set(nbw[v])
+        feid = jnp.full((F,), -1, jnp.int32).at[:D].set(nbe[v])
+        out = jnp.full((budget,), -1, jnp.int32)
+        st = dict(visited=visited, vcount=jnp.int32(1), fdst=fdst, fw=fw,
+                  feid=feid, fsize=jnp.int32(D), out=out, ocount=jnp.int32(0),
+                  hook=jnp.int32(-1), case=jnp.int32(0), queries=jnp.int32(1))
+
+        def cond(s):
+            return s["case"] == 0
+
+        def body(s):
+            idx = jnp.argmin(s["fw"])
+            best_w = s["fw"][idx]
+            dst = s["fdst"][idx]
+            eid = s["feid"][idx]
+            exhausted = jnp.isinf(best_w)
+            # consume the frontier entry
+            fw = s["fw"].at[idx].set(INF)
+            fdst = s["fdst"].at[idx].set(-1)
+            already = (s["visited"] == dst).any()
+            lower = rank[jnp.clip(dst, 0, n - 1)] < rank[v]
+            room = s["vcount"] < budget
+
+            def on_exhausted(s):
+                return {**s, "case": jnp.int32(2), "fw": fw, "fdst": fdst}
+
+            def on_seen(s):
+                return {**s, "fw": fw, "fdst": fdst}
+
+            def on_hook(s):
+                out = s["out"].at[s["ocount"]].set(eid)
+                return {**s, "fw": fw, "fdst": fdst, "out": out,
+                        "ocount": s["ocount"] + 1, "hook": dst,
+                        "case": jnp.int32(3), "queries": s["queries"] + 1}
+
+            def on_add(s):
+                visited = s["visited"].at[s["vcount"]].set(dst)
+                out = s["out"].at[s["ocount"]].set(eid)
+                pos = s["fsize"]
+                fdst2 = jax.lax.dynamic_update_slice(fdst, nbr[dst], (pos,))
+                fw2 = jax.lax.dynamic_update_slice(fw, nbw[dst], (pos,))
+                feid2 = jax.lax.dynamic_update_slice(s["feid"], nbe[dst], (pos,))
+                vcount = s["vcount"] + 1
+                case = jnp.where(vcount >= budget, jnp.int32(1), jnp.int32(0))
+                return {**s, "visited": visited, "vcount": vcount,
+                        "fdst": fdst2, "fw": fw2, "feid": feid2,
+                        "fsize": pos + D, "out": out, "ocount": s["ocount"] + 1,
+                        "case": case, "queries": s["queries"] + 1}
+
+            branch = jnp.where(exhausted, 0,
+                               jnp.where(already, 1, jnp.where(lower, 2, 3)))
+            return jax.lax.switch(branch, [on_exhausted, on_seen, on_hook, on_add], s)
+
+        s = jax.lax.while_loop(cond, body, st)
+        return s["out"], s["hook"], s["case"], s["queries"]
+
+    return jax.vmap(per_vertex)(jnp.arange(n, dtype=jnp.int32))
+
+
+# --------------------------------------------------------------------------
+# Proposition 3.2: forest contraction by pointer jumping (in-round)
+# --------------------------------------------------------------------------
+@jax.jit
+def pointer_jump(parent: jnp.ndarray):
+    """Iterated doubling to the root; returns (roots, num_doublings)."""
+    def cond(s):
+        p, _ = s
+        return jnp.any(p[p] != p)
+
+    def body(s):
+        p, it = s
+        return p[p], it + 1
+
+    p, iters = jax.lax.while_loop(cond, body, (parent, jnp.int32(0)))
+    return p, iters
+
+
+# --------------------------------------------------------------------------
+# Contraction: relabel edges, drop self-loops, dedup (min weight per pair)
+# --------------------------------------------------------------------------
+@jax.jit
+def contract_edges(u, v, w, eid, valid, labels):
+    """Relabel endpoints by ``labels``; self-loops invalidated; duplicate
+    (cu, cv) pairs keep only the minimum-weight edge. Shapes are static; a
+    boolean ``valid`` mask tracks liveness.  Returns (cu, cv, w, eid, valid,
+    n_live_vertices)."""
+    cu = labels[u]
+    cv = labels[v]
+    lo = jnp.minimum(cu, cv)
+    hi = jnp.maximum(cu, cv)
+    valid = valid & (lo != hi)
+    big = jnp.int32(jnp.iinfo(jnp.int32).max)
+    klo = jnp.where(valid, lo, big)
+    khi = jnp.where(valid, hi, big)
+    order = jnp.lexsort((w, khi, klo))
+    slo, shi = klo[order], khi[order]
+    first = jnp.concatenate([jnp.ones((1,), bool),
+                             (slo[1:] != slo[:-1]) | (shi[1:] != shi[:-1])])
+    keep = jnp.zeros_like(valid).at[order].set(first) & valid
+    # live vertex count: labels that appear as an endpoint of a live edge
+    live = jnp.zeros(labels.shape[0], jnp.int32)
+    live = live.at[jnp.where(keep, lo, 0)].max(keep.astype(jnp.int32), mode="drop")
+    live = live.at[jnp.where(keep, hi, 0)].max(keep.astype(jnp.int32), mode="drop")
+    return cu, cv, w, eid, keep, live.sum()
+
+
+# --------------------------------------------------------------------------
+# DenseMSF stand-in: in-round Borůvka (min-edge hooking + doubling)
+# --------------------------------------------------------------------------
+def _component_min_edge(lu, lv, w, eid, valid, n):
+    """For each component label, the (weight, lane)-lexicographic minimum
+    incident cross edge.  Lanes (edge positions) are unique even when edge
+    ids repeat (ternarization dummy edges all carry eid=-1), so the choice is
+    unambiguous and two components hooking each other always agree on the
+    same edge.  Returns (min_eid (n,), partner (n,), has (n,))."""
+    E = w.shape[0]
+    cross = valid & (lu != lv)
+    wbig = jnp.where(cross, w, INF)
+    both_l = jnp.concatenate([lu, lv])
+    seg_w = jax.ops.segment_min(jnp.concatenate([wbig, wbig]), both_l,
+                                num_segments=n)
+    lane = jnp.arange(E, dtype=jnp.int32)
+    big = jnp.int32(2**30)
+    lane_u = jnp.where(cross & (w <= seg_w[lu]), lane, big)
+    lane_v = jnp.where(cross & (w <= seg_w[lv]), lane, big)
+    seg_lane = jax.ops.segment_min(jnp.concatenate([lane_u, lane_v]), both_l,
+                                   num_segments=n)
+    has = seg_lane < big
+    sl = jnp.clip(seg_lane, 0, E - 1)
+    min_eid = jnp.where(has, eid[sl], -1)
+    comp = jnp.arange(n, dtype=jnp.int32)
+    plu, plv = lu[sl], lv[sl]
+    partner = jnp.where(plu == comp, plv, plu)
+    partner = jnp.where(has, partner, comp)
+    return min_eid, partner, has
+
+
+def boruvka_core(u, v, w, eid, valid, n_labels: int, max_eid: int):
+    """Borůvka run to completion inside one program (while_loop).
+    Traceable core — call inside other jitted programs; use
+    ``boruvka_inround`` for a standalone launch.
+
+    Returns (msf_mask over [0, max_eid), labels, phases)."""
+    n = n_labels
+    labels0 = jnp.arange(n, dtype=jnp.int32)
+    mask0 = jnp.zeros((max_eid,), bool)
+
+    def cond(s):
+        labels, mask, it, done = s
+        return ~done
+
+    def body(s):
+        labels, mask, it, _ = s
+        lu, lv = labels[u], labels[v]
+        min_eid, partner, has = _component_min_edge(lu, lv, w, eid, valid, n)
+        parent = jnp.where(has, partner, labels0)
+        # break 2-cycles: keep the hook only on the smaller label
+        two = (parent[parent] == labels0) & (parent != labels0)
+        parent = jnp.where(two & (labels0 > parent), labels0, parent)
+        roots, _ = pointer_jump(parent)
+        # an edge is selected if it was some component's min edge; invalid
+        # lanes (no edge / dummy eid=-1) scatter out-of-bounds and are dropped
+        sel = jnp.where(has & (min_eid >= 0), min_eid, max_eid)
+        selected_mask = jnp.zeros((max_eid,), bool).at[sel].set(True, mode="drop")
+        mask = mask | selected_mask
+        labels = roots[labels]
+        done = ~jnp.any(has)
+        return labels, mask, it + 1, done
+
+    labels, mask, phases, _ = jax.lax.while_loop(
+        cond, body, (labels0, mask0, jnp.int32(0), jnp.asarray(False)))
+    return mask, labels, phases
+
+
+boruvka_inround = functools.partial(jax.jit, static_argnames=("n_labels", "max_eid"))(
+    boruvka_core)
+
+
+# --------------------------------------------------------------------------
+# Algorithm 2 driver (AMPC): 5 materialized shuffles, like the paper's impl
+# --------------------------------------------------------------------------
+def msf_ampc(g: UGraph, epsilon: float = 0.5, seed: int = 0,
+             ledger: Optional[RoundLedger] = None,
+             skip_ternarize_if_dense: bool = True) -> Tuple[np.ndarray, dict]:
+    """Compute the MSF mask over g.edges.  Returns (mask, stats)."""
+    ledger = ledger if ledger is not None else RoundLedger("ampc_msf")
+    assert g.weights is not None
+    n, m = g.n, g.m
+    rng = np.random.default_rng(seed)
+
+    dense = skip_ternarize_if_dense and m >= n ** (1.0 + epsilon / 2.0)
+    if dense:
+        # Proposition 3.1 path: run the dense routine directly.
+        u = jnp.asarray(g.edges[:, 0]); v = jnp.asarray(g.edges[:, 1])
+        w = jnp.asarray(g.weights); eid = jnp.arange(m, dtype=jnp.int32)
+        valid = jnp.ones((m,), bool)
+        with ledger.shuffle("DenseMSF", nbytes_of(g.edges, g.weights)):
+            mask, _, phases = boruvka_inround(u, v, w, eid, valid, n, m)
+            mask = np.asarray(jax.device_get(mask))
+        return mask, {"phases": int(jax.device_get(phases)), "path": "dense"}
+
+    # --- shuffle 1: SortGraph (ternarize + build sorted adjacency, write DHT)
+    with ledger.shuffle("SortGraph", nbytes_of(g.edges, g.weights)):
+        tg = ternarize(g)
+        nbr, nbw, nbe = tg.g.padded_adj(3)
+        nt = tg.g.n
+        rank = rng.permutation(nt).astype(np.float32)
+        budget = max(2, int(np.ceil(nt ** (epsilon / 2.0))))
+    ledger.record_queries(0, 0, waves=0)
+
+    # --- shuffle 2: PrimSearch (adaptive queries against the DHT snapshot)
+    jn_nbr, jn_nbw, jn_nbe = jnp.asarray(nbr), jnp.asarray(nbw), jnp.asarray(nbe)
+    jn_rank = jnp.asarray(rank)
+    with ledger.shuffle("PrimSearch", 0):
+        out_eids, hooks, cases, queries = truncated_prim(
+            jn_nbr, jn_nbw, jn_nbe, jn_rank, budget)
+        total_q = int(jax.device_get(queries.sum()))
+    row_bytes = 3 * (4 + 4 + 4)
+    ledger.record_queries(total_q, total_q * row_bytes, waves=1)
+
+    # --- shuffle 3: PointerJump (contract the hook forest, Prop 3.2)
+    with ledger.shuffle("PointerJump", nbytes_of(np.asarray(hooks))):
+        parent = jnp.where(hooks >= 0, hooks, jnp.arange(nt, dtype=jnp.int32))
+        roots, jump_iters = pointer_jump(parent)
+    ledger.record_queries(int(jax.device_get(jump_iters)) * nt,
+                          int(jax.device_get(jump_iters)) * nt * 4, waves=1)
+
+    # --- shuffle 4: Contract (relabel + dedup on the ternarized edge list)
+    tu = jnp.asarray(tg.g.edges[:, 0]); tv = jnp.asarray(tg.g.edges[:, 1])
+    tw = jnp.asarray(tg.g.weights); teid = jnp.asarray(tg.orig_eid)
+    with ledger.shuffle("Contract", nbytes_of(tg.g.edges, tg.g.weights)):
+        cu, cv, cw, ceid, cvalid, live = contract_edges(
+            tu, tv, tw, teid, jnp.ones((tg.g.m,), bool), roots)
+        live_v = int(jax.device_get(live))
+
+    # --- shuffle 5: DenseMSF on the contracted graph
+    with ledger.shuffle("DenseMSF", 0):
+        dmask, dlabels, phases = boruvka_inround(cu, cv, cw, ceid, cvalid, nt, max(m, 1))
+        dmask = np.asarray(jax.device_get(dmask))
+
+    # union of Prim-discovered edges and the dense-phase edges
+    prim_eids = np.asarray(jax.device_get(out_eids)).ravel()
+    prim_eids = prim_eids[prim_eids >= 0]
+    orig = tg.orig_eid[prim_eids]
+    orig = orig[orig >= 0]
+    mask = dmask.copy()
+    if m:
+        mask[orig] = True
+    stats = {
+        "path": "sparse",
+        "budget": budget,
+        "n_tern": nt,
+        "queries": total_q,
+        "avg_queries_per_vertex": total_q / max(nt, 1),
+        "pointer_jump_iters": int(jax.device_get(jump_iters)),
+        "contracted_vertices": live_v,
+        "shrink_factor": nt / max(live_v, 1),
+        "dense_phases": int(jax.device_get(phases)),
+        "stop_cases": {int(k): int(c) for k, c in zip(
+            *np.unique(np.asarray(jax.device_get(cases)), return_counts=True))},
+    }
+    return mask, stats
+
+
+# --------------------------------------------------------------------------
+# MPC baseline: red/blue Borůvka, 3 shuffles per phase (paper Section 5.5)
+# --------------------------------------------------------------------------
+@jax.jit
+def _mpc_boruvka_phase(u, v, w, eid, valid, labels, color, max_eid_mask):
+    """One red/blue Borůvka phase (paper Section 5.5): each *blue* component
+    computes its overall minimum incident cross edge and contracts into the
+    partner only if the partner is *red*."""
+    n = labels.shape[0]
+    lu, lv = labels[u], labels[v]
+    min_eid, partner, has = _component_min_edge(lu, lv, w, eid, valid, n)
+    ids = jnp.arange(n, dtype=jnp.int32)
+    hook = has & color[ids] & ~color[partner]        # I am blue, partner red
+    parent = jnp.where(hook, partner, ids)           # depth 1, acyclic
+    sel = jnp.where(hook & (min_eid >= 0), min_eid, max_eid_mask.shape[0])
+    selected = jnp.zeros_like(max_eid_mask).at[sel].set(True, mode="drop")
+    labels = parent[labels]
+    new_valid = valid & (labels[u] != labels[v])
+    remaining = new_valid.sum()
+    return labels, selected, new_valid, remaining
+
+
+def msf_mpc_boruvka(g: UGraph, seed: int = 0,
+                    ledger: Optional[RoundLedger] = None,
+                    max_phases: int = 200) -> Tuple[np.ndarray, dict]:
+    ledger = ledger if ledger is not None else RoundLedger("mpc_msf")
+    n, m = g.n, g.m
+    rng = np.random.default_rng(seed)
+    u = jnp.asarray(g.edges[:, 0]); v = jnp.asarray(g.edges[:, 1])
+    w = jnp.asarray(g.weights); eid = jnp.arange(m, dtype=jnp.int32)
+    valid = jnp.ones((m,), bool)
+    labels = jnp.arange(n, dtype=jnp.int32)
+    mask = np.zeros(m, bool)
+    phase_bytes = nbytes_of(g.edges, g.weights)
+    phases = 0
+    remaining = m
+    while remaining > 0 and phases < max_phases:
+        color = jnp.asarray(rng.random(n) < 0.5)
+        # the paper's MPC algorithm performs 3 shuffles per contraction phase
+        with ledger.shuffle(f"boruvka_minedge_{phases}", phase_bytes):
+            pass
+        with ledger.shuffle(f"boruvka_hook_{phases}", n * 4):
+            labels, selected, valid, rem = _mpc_boruvka_phase(
+                u, v, w, eid, valid, labels, color,
+                jnp.zeros((m,), bool))
+        with ledger.shuffle(f"boruvka_relabel_{phases}", phase_bytes):
+            mask |= np.asarray(jax.device_get(selected))
+            remaining = int(jax.device_get(rem))
+        phases += 1
+    return mask, {"phases": phases}

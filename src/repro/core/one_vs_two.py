@@ -1,0 +1,181 @@
+"""1-vs-2-Cycle (paper Section 5.6) — the canonical AMPC-vs-MPC separation.
+
+AMPC: sample vertices with probability p (paper uses 1/1024); each sampled
+vertex *walks* the cycle by adaptive pointer chasing inside a single round
+until it meets the next sampled vertex; the contracted cycle over samples is
+then resolved by in-round doubling.  One shuffle writes the graph to the DHT;
+one launch answers.
+
+MPC baseline: pointer doubling with one materialized launch per phase —
+Θ(log n) shuffles (the conjectured lower bound for this problem in MPC).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..graph.coo import UGraph
+from .rounds import RoundLedger, nbytes_of
+
+
+def cycle_adjacency(g: UGraph) -> np.ndarray:
+    """(n,2) neighbour table; validates the graph is a disjoint cycle union."""
+    deg = g.degrees()
+    assert (deg == 2).all(), "1-vs-2-cycle input must be a union of cycles"
+    nbr = np.full((g.n, 2), -1, np.int64)
+    cnt = np.zeros(g.n, np.int64)
+    for a, b in g.edges:
+        nbr[a, cnt[a]] = b; cnt[a] += 1
+        nbr[b, cnt[b]] = a; cnt[b] += 1
+    return nbr.astype(np.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("max_steps",))
+def _walk(nbr, sampled, ids, max_steps: int):
+    """Each sampled vertex walks *outward in both directions* until the next
+    sampled vertex (adaptive in-round pointer chasing)."""
+
+    def walk(v, direction):
+        start_next = nbr[v, direction]
+
+        def cond(s):
+            prev, cur, steps, done = s
+            return ~done & (steps < max_steps)
+
+        def body(s):
+            prev, cur, steps, done = s
+            nxt = jnp.where(nbr[cur, 0] == prev, nbr[cur, 1], nbr[cur, 0])
+            return cur, nxt, steps + 1, sampled[nxt]
+
+        prev, cur, steps, done = jax.lax.while_loop(
+            cond, body, (v, start_next, jnp.int32(1), sampled[start_next]))
+        return jnp.where(done, cur, -1), steps, done
+
+    succ0, steps0, done0 = jax.vmap(lambda v: walk(v, 0))(ids)
+    succ1, steps1, done1 = jax.vmap(lambda v: walk(v, 1))(ids)
+    ok = jnp.all(jnp.where(sampled, done0 & done1, True))
+    total_steps = jnp.where(sampled, steps0 + steps1, 0).sum()
+    return succ0, succ1, total_steps, ok
+
+
+@functools.partial(jax.jit, static_argnames=("n",))
+def _count_components(succ0, succ1, sampled, ids, n: int):
+    """Contracted graph: arcs (v, succ[v]) per direction for samples;
+    components via in-round hook-and-contract."""
+    from .msf import boruvka_core
+    u_c = jnp.concatenate([ids, ids])
+    v_c = jnp.concatenate([jnp.where(sampled & (succ0 >= 0), succ0, ids),
+                           jnp.where(sampled & (succ1 >= 0), succ1, ids)])
+    valid = jnp.concatenate([sampled, sampled]) & (u_c != v_c)
+    w_c = jnp.arange(2 * n, dtype=jnp.float32)
+    eid_c = jnp.arange(2 * n, dtype=jnp.int32)
+    _, labels, _ = boruvka_core(u_c, v_c, w_c, eid_c, valid, n, 2 * n)
+    seen = jnp.zeros((n,), jnp.int32).at[
+        jnp.where(sampled, labels, n)].max(1, mode="drop")
+    return seen.sum()
+
+
+def _walk_and_count(nbr, sampled, max_steps: int):
+    from ..runtime.retry import resilient_call
+    n = nbr.shape[0]
+    ids = jnp.arange(n, dtype=jnp.int32)
+    succ0, succ1, total_steps, ok = resilient_call(
+        _walk, nbr, sampled, ids, max_steps)
+    ncomp = resilient_call(_count_components, succ0, succ1, sampled, ids, n)
+    return ncomp, total_steps, ok
+
+
+def one_vs_two_ampc(g: UGraph, p: float = 1.0 / 64, seed: int = 0,
+                    ledger: Optional[RoundLedger] = None,
+                    max_steps: Optional[int] = None) -> Tuple[int, dict]:
+    """Returns (num_cycles, stats)."""
+    ledger = ledger if ledger is not None else RoundLedger("ampc_1v2c")
+    n = g.n
+    rng = np.random.default_rng(seed)
+    with ledger.shuffle("WriteKV", nbytes_of(g.edges)):
+        nbr = jnp.asarray(cycle_adjacency(g))
+        sampled = rng.random(n) < p
+        # guarantee at least one sample (paper: w.h.p. argument)
+        if not sampled.any():
+            sampled[rng.integers(n)] = True
+        sampled = jnp.asarray(sampled)
+    ms = max_steps or int(min(n + 1, np.ceil(8 * np.log(max(n, 2)) / p)))
+    with ledger.shuffle("SampleWalk", int(np.asarray(sampled).sum()) * 4):
+        ncomp, steps, ok = _walk_and_count(nbr, sampled, ms)
+        ncomp = int(jax.device_get(ncomp))
+        total_steps = int(jax.device_get(steps))
+        ok = bool(jax.device_get(ok))
+    ledger.record_queries(total_steps, total_steps * 12, waves=1)
+    if not ok:
+        raise RuntimeError("walk budget exceeded; increase p or max_steps")
+    return ncomp, {"samples": int(np.asarray(jax.device_get(sampled)).sum()),
+                   "walk_steps": total_steps, "max_steps": ms}
+
+
+@jax.jit
+def _local_contraction_phase(a, b, parent, alive, rank):
+    """One CC-LocalContraction phase: remove rank-local-minima, reconnect
+    their neighbours.  Self-loop vertices (a==b==self) are finished cycles."""
+    n = a.shape[0]
+    ids = jnp.arange(n, dtype=jnp.int32)
+    finished = (a == ids) & (b == ids)
+    act = alive & ~finished
+    is_min = act & (rank < rank[a]) & (rank < rank[b])
+    # 2-cycles (a==b!=self): the smaller-rank endpoint is the local min
+    two = act & (a == b) & (a != ids)
+    is_min = jnp.where(two, act & (rank < rank[a]), is_min)
+
+    def other(x, u):
+        """neighbour of x that is not u (for 2-cycles returns u itself,
+        collapsing to a self-loop)."""
+        return jnp.where(a[x] == u, b[x], a[x])
+
+    # surviving vertices repoint through removed neighbours
+    new_a = jnp.where(is_min[a], other(a, ids), a)
+    new_b = jnp.where(is_min[b], other(b, ids), b)
+    # removed vertices remember a surviving neighbour for label recovery
+    parent = jnp.where(is_min, a, parent)
+    # removed vertices become inert self-loops
+    new_a = jnp.where(is_min, ids, new_a)
+    new_b = jnp.where(is_min, ids, new_b)
+    alive = alive & ~is_min
+    remaining = (alive & ~((new_a == ids) & (new_b == ids))).sum()
+    return new_a, new_b, parent, alive, remaining
+
+
+def one_vs_two_mpc(g: UGraph, seed: int = 0,
+                   ledger: Optional[RoundLedger] = None) -> Tuple[int, dict]:
+    """CC-LocalContraction MPC baseline (Section 5.6): each phase removes the
+    rank-local-minima of every cycle and reconnects; 3 shuffles per phase,
+    O(log n) phases; the residual graph is finished in memory (the paper
+    switches to a single machine below 5e7 edges)."""
+    ledger = ledger if ledger is not None else RoundLedger("mpc_1v2c")
+    n = g.n
+    rng = np.random.default_rng(seed)
+    nbr = cycle_adjacency(g)
+    a = jnp.asarray(nbr[:, 0]); b = jnp.asarray(nbr[:, 1])
+    rank = jnp.asarray(rng.permutation(n).astype(np.float32))
+    parent = jnp.arange(n, dtype=jnp.int32)
+    alive = jnp.ones((n,), bool)
+    phases, remaining = 0, n
+    nb = nbytes_of(g.edges)
+    shrink = []
+    while remaining > 0 and phases < 200:
+        prev = remaining
+        with ledger.shuffle(f"lc_minima_{phases}", nb):
+            a, b, parent, alive, rem = _local_contraction_phase(
+                a, b, parent, alive, rank)
+        with ledger.shuffle(f"lc_reconnect_{phases}", nb):
+            remaining = int(jax.device_get(rem))
+        with ledger.shuffle(f"lc_relabel_{phases}", n * 4):
+            shrink.append(prev / max(remaining, 1))
+        phases += 1
+    # in-memory finish: pointer-jump parents to roots
+    from .msf import pointer_jump
+    roots, _ = pointer_jump(parent)
+    ncomp = int(len(np.unique(np.asarray(jax.device_get(roots)))))
+    return ncomp, {"phases": phases, "shrink_per_phase": shrink}

@@ -1,0 +1,76 @@
+"""Round / query / byte accounting for AMPC and MPC executions.
+
+The paper measures (Table 3, Fig 3, Fig 9):
+  * shuffles  — materialized rounds (Flume stages writing to durable storage);
+  * bytes shuffled — data written by shuffles;
+  * DHT communication — bytes of key-value store queries + answers;
+  * query count — number of KV lookups.
+
+Here a "shuffle" is a materialized jitted-program launch whose outputs are
+committed (and, under the fault-tolerant runtime, checkpointed).  Adaptive
+in-round query waves performed via ``lax.while_loop`` count queries/DHT bytes
+but not shuffles — exactly the AMPC accounting.  MPC baselines call
+``ledger.shuffle`` once per phase instead.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import time
+from typing import Dict, List
+
+
+@dataclasses.dataclass
+class RoundLedger:
+    algorithm: str = ""
+    shuffles: int = 0
+    bytes_shuffled: int = 0
+    dht_queries: int = 0
+    dht_bytes: int = 0
+    dht_query_waves: int = 0
+    dedup_savings: int = 0  # queries avoided by the caching optimization
+    wall_time_s: float = 0.0
+    phase_times: Dict[str, float] = dataclasses.field(default_factory=dict)
+    events: List[str] = dataclasses.field(default_factory=list)
+
+    # -- shuffle (materialized round) -------------------------------------
+    @contextlib.contextmanager
+    def shuffle(self, name: str, nbytes: int = 0):
+        t0 = time.perf_counter()
+        yield
+        dt = time.perf_counter() - t0
+        self.shuffles += 1
+        self.bytes_shuffled += int(nbytes)
+        self.wall_time_s += dt
+        self.phase_times[name] = self.phase_times.get(name, 0.0) + dt
+        self.events.append(f"shuffle:{name}:{nbytes}B:{dt:.4f}s")
+
+    # -- DHT traffic -------------------------------------------------------
+    def record_queries(self, n_queries: int, nbytes: int, waves: int = 1,
+                       deduped_away: int = 0):
+        self.dht_queries += int(n_queries)
+        self.dht_bytes += int(nbytes)
+        self.dht_query_waves += int(waves)
+        self.dedup_savings += int(deduped_away)
+
+    def summary(self) -> Dict:
+        return {
+            "algorithm": self.algorithm,
+            "shuffles": self.shuffles,
+            "bytes_shuffled": self.bytes_shuffled,
+            "dht_queries": self.dht_queries,
+            "dht_bytes": self.dht_bytes,
+            "dht_query_waves": self.dht_query_waves,
+            "dedup_savings": self.dedup_savings,
+            "wall_time_s": round(self.wall_time_s, 4),
+            "phase_times": {k: round(v, 4) for k, v in self.phase_times.items()},
+        }
+
+
+def nbytes_of(*arrays) -> int:
+    total = 0
+    for a in arrays:
+        if a is None:
+            continue
+        total += a.size * a.dtype.itemsize
+    return int(total)

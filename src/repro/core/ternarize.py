@@ -1,0 +1,88 @@
+"""Ternarization (Algorithm 2, line 2): bound degrees by 3.
+
+Every vertex v with deg(v) > 3 is replaced by a cycle of deg(v) dummy
+vertices; the i-th incident edge of v attaches to the i-th cycle vertex.
+Dummy cycle edges get weight "bottom" (strictly below the lightest real edge)
+so they always enter the MSF first and never displace real MSF edges; they are
+removed from the output (their edge id is -1).
+
+Host-side numpy — this is a data-layout transformation, part of the input
+pipeline of the MSF job.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from ..graph.coo import UGraph
+
+
+@dataclasses.dataclass
+class TernGraph:
+    g: UGraph                 # ternarized graph (weights include dummy edges)
+    orig_eid: np.ndarray      # (m_tern,) original edge id, -1 for dummy edges
+    node_of: np.ndarray       # (n_tern,) original vertex of each tern vertex
+    n_orig: int
+    m_orig: int
+
+
+def ternarize(g: UGraph) -> TernGraph:
+    assert g.weights is not None, "ternarize expects a weighted graph"
+    n, m = g.n, g.m
+    deg = g.degrees()
+    slots = np.maximum(deg, 1)
+    expand = deg > 3
+    n_slots = np.where(expand, slots, 1).astype(np.int64)
+    offset = np.zeros(n + 1, np.int64)
+    np.cumsum(n_slots, out=offset[1:])
+    n_tern = int(offset[-1])
+
+    # position of each directed edge inside its source's adjacency list
+    indptr, indices, w, eid = g.csr()
+    pos_in_adj = np.arange(len(indices), dtype=np.int64) - np.repeat(indptr[:-1], np.diff(indptr))
+    src = np.repeat(np.arange(n, dtype=np.int64), np.diff(indptr))
+    # per undirected edge, slot at each endpoint
+    slot_u = np.zeros(m, np.int64)
+    slot_v = np.zeros(m, np.int64)
+    # each undirected eid appears exactly twice in the directed view
+    first_seen = np.full(m, -1, np.int64)
+    for p in range(len(indices)):
+        e = eid[p]
+        if first_seen[e] < 0:
+            first_seen[e] = p
+            slot_u[e] = pos_in_adj[p]
+        else:
+            slot_v[e] = pos_in_adj[p]
+    del src
+
+    u, v = g.edges[:, 0].astype(np.int64), g.edges[:, 1].astype(np.int64)
+    nu = offset[u] + np.where(expand[u], slot_u, 0)
+    nv = offset[v] + np.where(expand[v], slot_v, 0)
+    real_edges = np.stack([nu, nv], axis=1)
+
+    # dummy cycle edges for expanded vertices
+    exp_ids = np.where(expand)[0]
+    dummy_u, dummy_v = [], []
+    for x in exp_ids:
+        base, d = offset[x], deg[x]
+        idx = base + np.arange(d)
+        dummy_u.append(idx)
+        dummy_v.append(base + (np.arange(d) + 1) % d)
+    if dummy_u:
+        dummy_edges = np.stack([np.concatenate(dummy_u), np.concatenate(dummy_v)], axis=1)
+    else:
+        dummy_edges = np.zeros((0, 2), np.int64)
+
+    lightest = float(g.weights.min()) if m else 0.0
+    bot = lightest - 1.0
+    k = dummy_edges.shape[0]
+    dummy_w = bot - np.arange(k, dtype=np.float32) / max(k, 1)  # distinct, all < lightest
+
+    edges = np.concatenate([real_edges, dummy_edges]).astype(np.int32)
+    weights = np.concatenate([g.weights, dummy_w]).astype(np.float32)
+    orig = np.concatenate([np.arange(m, dtype=np.int32), np.full(k, -1, np.int32)])
+
+    node_of = np.repeat(np.arange(n, dtype=np.int32), n_slots)
+    tg = UGraph(n_tern, edges, weights)
+    return TernGraph(tg, orig, node_of, n, m)

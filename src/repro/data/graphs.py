@@ -1,0 +1,149 @@
+"""Graph dataset builders: padded GraphBatch construction + neighbor sampler.
+
+Provides stand-ins for the assigned GNN shape regimes:
+  * cora_like       — full_graph_sm (node classification)
+  * products_like   — ogb_products (full-batch large; scaled down for tests)
+  * molecules       — batched small radius graphs with positions/species
+  * NeighborSampler — layer-wise fanout sampling (minibatch_lg), real CSR
+                      sampling in numpy (this IS the data pipeline hot path)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import numpy as np
+import jax.numpy as jnp
+
+from ..graph import generators as gen
+from ..graph.coo import UGraph
+from ..models.gnn.common import GraphBatch
+
+
+def _to_batch(g: UGraph, node_feat=None, positions=None, species=None,
+              labels=None, graph_ids=None, n_graphs=1,
+              pad_nodes: Optional[int] = None, pad_edges: Optional[int] = None):
+    s, r, _, _ = g.symmetric()
+    n, e = g.n, len(s)
+    pn = pad_nodes or n
+    pe = pad_edges or e
+    assert pn >= n and pe >= e
+    senders = np.full(pe, pn - 1, np.int32); senders[:e] = s
+    receivers = np.full(pe, pn - 1, np.int32); receivers[:e] = r
+    edge_mask = np.zeros(pe, bool); edge_mask[:e] = True
+    node_mask = np.zeros(pn, bool); node_mask[:n] = True
+
+    def pad2(x, fill=0.0):
+        if x is None:
+            return None
+        out = np.full((pn,) + x.shape[1:], fill, x.dtype)
+        out[:n] = x
+        return jnp.asarray(out)
+
+    gid = np.zeros(pn, np.int32)
+    if graph_ids is not None:
+        gid[:n] = graph_ids
+    lab = None
+    if labels is not None:
+        if labels.shape[0] == n:   # node labels
+            lab = pad2(labels)
+        else:
+            lab = jnp.asarray(labels)
+    return GraphBatch(
+        senders=jnp.asarray(senders), receivers=jnp.asarray(receivers),
+        node_mask=jnp.asarray(node_mask), edge_mask=jnp.asarray(edge_mask),
+        graph_ids=jnp.asarray(gid), n_graphs=n_graphs,
+        node_feat=pad2(node_feat), positions=pad2(positions),
+        species=pad2(species), labels=lab)
+
+
+def cora_like(n_nodes=2708, avg_deg=4.0, d_feat=1433, n_classes=7, seed=0):
+    g = gen.erdos_renyi(n_nodes, avg_deg, seed=seed)
+    rng = np.random.default_rng(seed)
+    feat = (rng.random((g.n, d_feat)) < 0.01).astype(np.float32)
+    labels = rng.integers(0, n_classes, g.n).astype(np.int32)
+    return _to_batch(g, node_feat=feat, labels=labels)
+
+
+def products_like(n_nodes=10000, avg_deg=8.0, d_feat=100, n_classes=47, seed=0):
+    g = gen.rmat(int(np.ceil(np.log2(n_nodes))), avg_deg, seed=seed)
+    rng = np.random.default_rng(seed)
+    feat = rng.standard_normal((g.n, d_feat)).astype(np.float32)
+    labels = rng.integers(0, n_classes, g.n).astype(np.int32)
+    return _to_batch(g, node_feat=feat, labels=labels)
+
+
+def molecules(n_graphs=128, n_atoms=30, seed=0, d_feat: int = 0):
+    """Batch of small radius graphs with positions+species (+ optional
+    one-hot-ish features for GCN/GIN)."""
+    parts, pos_all, sp_all, gids = [], [], [], []
+    off = 0
+    rng = np.random.default_rng(seed)
+    for i in range(n_graphs):
+        g, pos, sp = gen.random_geometric(n_atoms, 1.6, seed=seed * 1000 + i)
+        parts.append(g.edges + off)
+        pos_all.append(pos); sp_all.append(sp)
+        gids.append(np.full(n_atoms, i, np.int32))
+        off += n_atoms
+    g = UGraph(off, np.concatenate(parts))
+    pos = np.concatenate(pos_all); sp = np.concatenate(sp_all)
+    gid = np.concatenate(gids)
+    energies = rng.standard_normal(n_graphs).astype(np.float32)
+    feat = None
+    if d_feat:
+        feat = np.eye(max(d_feat, 8), dtype=np.float32)[sp % max(d_feat, 8)][:, :d_feat]
+    return _to_batch(g, node_feat=feat, positions=pos, species=sp,
+                     labels=energies, graph_ids=gid, n_graphs=n_graphs)
+
+
+class NeighborSampler:
+    """Layer-wise uniform fanout sampler over a CSR graph (GraphSAGE-style).
+
+    Sampling runs in numpy (host data pipeline); the output block is a padded
+    GraphBatch with exactly the static shapes of the minibatch_lg spec, so
+    every training step compiles once.
+    """
+
+    def __init__(self, g: UGraph, fanout: Tuple[int, ...], seed: int = 0):
+        self.indptr, self.indices, _, _ = g.csr()
+        self.fanout = fanout
+        self.rng = np.random.default_rng(seed)
+        self.n = g.n
+
+    def sample_block(self, seeds: np.ndarray, node_feat: np.ndarray,
+                     labels: np.ndarray):
+        """Returns a GraphBatch whose first len(seeds) nodes are the seeds.
+        Edges point sampled-neighbor -> target (message direction)."""
+        nodes = [seeds.astype(np.int64)]
+        edges_s, edges_r = [], []
+        frontier = seeds.astype(np.int64)
+        base = 0
+        for f in self.fanout:
+            deg = self.indptr[frontier + 1] - self.indptr[frontier]
+            # uniform sample with replacement, padded to exactly f per node
+            r = self.rng.integers(0, np.maximum(deg, 1)[:, None],
+                                  (len(frontier), f))
+            idx = self.indptr[frontier][:, None] + r
+            nbrs = self.indices[np.minimum(idx, self.indptr[frontier][:, None]
+                                           + np.maximum(deg - 1, 0)[:, None])]
+            nbrs = np.where(deg[:, None] > 0, nbrs, frontier[:, None])
+            new = nbrs.reshape(-1)
+            # local ids: targets are at [base, base+len(frontier)); new nodes
+            # appended after current total
+            total = sum(len(x) for x in nodes)
+            src_local = total + np.arange(len(new))
+            dst_local = base + np.repeat(np.arange(len(frontier)), f)
+            edges_s.append(src_local); edges_r.append(dst_local)
+            nodes.append(new)
+            base = total
+            frontier = new
+        all_nodes = np.concatenate(nodes)
+        s = np.concatenate(edges_s).astype(np.int32)
+        r = np.concatenate(edges_r).astype(np.int32)
+        N, E = len(all_nodes), len(s)
+        return GraphBatch(
+            senders=jnp.asarray(s), receivers=jnp.asarray(r),
+            node_mask=jnp.ones(N, bool), edge_mask=jnp.ones(E, bool),
+            graph_ids=jnp.zeros(N, jnp.int32), n_graphs=1,
+            node_feat=jnp.asarray(node_feat[all_nodes]),
+            labels=jnp.asarray(labels[all_nodes]))

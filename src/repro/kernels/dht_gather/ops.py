@@ -1,0 +1,31 @@
+"""jit wrapper with impl switch for dht_gather (cached gather)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .kernel import dht_gather_pallas
+from .ref import dht_gather_ref
+
+
+def dht_gather(table, keys, impl: str = "pallas", interpret: bool = True,
+               block_q: int = 64, presorted: bool = False):
+    """Gather table rows for a key batch with the caching optimization.
+    Returns (out, cache_hits_total)."""
+    if not presorted:
+        order = jnp.argsort(keys)
+        sk = keys[order]
+    else:
+        order = None
+        sk = keys
+    if impl == "pallas":
+        out, hits = dht_gather_pallas(table, sk, block_q=block_q,
+                                      interpret=interpret)
+        total_hits = hits.sum()
+    else:
+        out = dht_gather_ref(table, sk)
+        total_hits = (sk[1:] == sk[:-1]).sum()
+    if order is not None:
+        inv = jnp.zeros_like(order).at[order].set(
+            jnp.arange(order.shape[0], dtype=order.dtype))
+        out = out[inv]
+    return out, total_hits

@@ -1,0 +1,12 @@
+"""Pure-jnp oracle: gather rows for a SORTED key batch (the DHT lookup)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def dht_gather_ref(table, sorted_keys):
+    """table: (V, D); sorted_keys: (Q,) int32 ascending, -1 = padding.
+    Returns (Q, D); padding rows are zeros."""
+    safe = jnp.clip(sorted_keys, 0, table.shape[0] - 1)
+    out = table[safe]
+    return jnp.where((sorted_keys >= 0)[:, None], out, 0)

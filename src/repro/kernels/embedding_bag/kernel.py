@@ -1,0 +1,47 @@
+"""Pallas TPU kernel: fused EmbeddingBag (gather + segment-sum).
+
+Grid over bag blocks; bag ids scalar-prefetched to SMEM; embedding rows DMA'd
+from the HBM table and accumulated in VMEM — never materializing the
+(B, L, D) gathered tensor.  Same adaptive-lookup pattern as dht_gather."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _embag_kernel(ids_ref, table_ref, o_ref, *, bb: int, L: int):
+    i = pl.program_id(0)
+    for b in range(bb):
+        acc = jnp.zeros((1, table_ref.shape[1]), jnp.float32)
+        for l in range(L):
+            idx = ids_ref[i * bb + b, l]
+            valid = idx > 0
+            safe = jnp.maximum(idx, 0)
+            row = pl.load(table_ref, (pl.ds(safe, 1), slice(None)))
+            acc = acc + jnp.where(valid, row.astype(jnp.float32), 0.0)
+        o_ref[b, :] = acc[0].astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_b", "interpret"))
+def embedding_bag_pallas(table, ids, block_b: int = 8, interpret: bool = True):
+    """table: (V, D); ids: (B, L) -> (B, D)."""
+    V, D = table.shape
+    B, L = ids.shape
+    bb = min(block_b, B)
+    assert B % bb == 0
+    kernel = functools.partial(_embag_kernel, bb=bb, L=L)
+    return pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=(B // bb,),
+            in_specs=[pl.BlockSpec(memory_space=pltpu.ANY)],
+            out_specs=pl.BlockSpec((bb, D), lambda i, ids: (i, 0)),
+        ),
+        out_shape=jax.ShapeDtypeStruct((B, D), table.dtype),
+        interpret=interpret,
+    )(ids, table)

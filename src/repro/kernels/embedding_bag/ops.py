@@ -1,0 +1,13 @@
+"""jit wrapper with impl switch for embedding_bag."""
+from __future__ import annotations
+
+from .kernel import embedding_bag_pallas
+from .ref import embedding_bag_ref
+
+
+def embedding_bag(table, ids, impl: str = "pallas", interpret: bool = True,
+                  block_b: int = 8):
+    if impl == "pallas":
+        return embedding_bag_pallas(table, ids, block_b=block_b,
+                                    interpret=interpret)
+    return embedding_bag_ref(table, ids)

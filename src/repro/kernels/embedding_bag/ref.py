@@ -1,0 +1,16 @@
+"""Pure-jnp oracle: EmbeddingBag (sum mode) — the recsys hot path.
+
+JAX has no native EmbeddingBag; the reference is gather + masked sum, and the
+Pallas kernel fuses the gather loop with the accumulation (no (B, L, D)
+intermediate)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def embedding_bag_ref(table, ids):
+    """table: (V, D); ids: (B, L) int32, 0 = padding row (excluded).
+    Returns (B, D) sums."""
+    emb = table[jnp.clip(ids, 0, table.shape[0] - 1)]
+    emb = jnp.where((ids > 0)[..., None], emb, 0)
+    return emb.sum(axis=1)

@@ -1,0 +1,242 @@
+"""Pallas TPU flash attention BACKWARD + custom_vjp wrapper.
+
+The §Perf analysis (EXPERIMENTS.md, cell 1) shows the dominant residual HBM
+traffic of LM training is the attention P-matrix round-trip in the XLA
+backward.  This kernel recomputes P per tile in VMEM (never in HBM) and
+produces dq, dk, dv.
+
+Decomposition (standard two-pass flash bwd):
+  pass 1 (dq): grid (B, H, nq, nk), kv innermost; accumulates
+      dq += (P ∘ (dS)) K   with dS = P ∘ (dO·Vᵀ − delta)
+  pass 2 (dk/dv): grid (B, Hkv, nk, nq), q innermost; accumulates
+      dv += Pᵀ dO (summed over the G query heads of the group),
+      dk += dSᵀ Q
+  delta = rowsum(dO ∘ O) precomputed in XLA (cheap, O(S·D)).
+
+Validated in interpret mode against jax.grad of the jnp oracle
+(tests/test_kernels_bwd.py).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from .kernel import flash_attention_fwd
+
+NEG_INF = -1e30
+
+
+def _bwd_dq_kernel(q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref, dq_ref,
+                   acc_ref, *, scale, causal, window, bq, bk, nk, q_offset):
+    ki = pl.program_id(3)
+    qi = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q_start = qi * bq + q_offset
+    k_start = ki * bk
+    must = True
+    if causal:
+        must = k_start <= q_start + bq - 1
+
+    @pl.when(must)
+    def _compute():
+        q = q_ref[0, :, 0, :].astype(jnp.float32)
+        k = k_ref[0, :, 0, :].astype(jnp.float32)
+        v = v_ref[0, :, 0, :].astype(jnp.float32)
+        do = do_ref[0, :, 0, :].astype(jnp.float32)
+        lse = lse_ref[0, 0, :].astype(jnp.float32)[:, None]
+        delta = delta_ref[0, 0, :].astype(jnp.float32)[:, None]
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        qpos = q_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+        kpos = k_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        diff = qpos - kpos
+        mask = jnp.ones((bq, bk), bool)
+        if causal:
+            mask &= diff >= 0
+        if window > 0:
+            mask &= diff < window
+        s = jnp.where(mask, s, NEG_INF)
+        p = jnp.exp(s - lse)                       # exact softmax via saved lse
+        dp = jax.lax.dot_general(do, v, (((1,), (1,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+        ds = p * (dp - delta) * scale
+        acc_ref[...] += jax.lax.dot_general(ds, k, (((1,), (0,)), ((), ())),
+                                            preferred_element_type=jnp.float32)
+
+    @pl.when(ki == nk - 1)
+    def _fin():
+        dq_ref[0, :, 0, :] = acc_ref[...].astype(dq_ref.dtype)
+
+
+def _bwd_dkv_kernel(q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref,
+                    dk_ref, dv_ref, dk_acc, dv_acc, *, scale, causal, window,
+                    bq, bk, nq, G, q_offset):
+    qi = pl.program_id(3)   # innermost: q blocks
+    ki = pl.program_id(2)
+
+    @pl.when(qi == 0)
+    def _init():
+        dk_acc[...] = jnp.zeros_like(dk_acc)
+        dv_acc[...] = jnp.zeros_like(dv_acc)
+
+    q_start = qi * bq + q_offset
+    k_start = ki * bk
+    must = True
+    if causal:
+        must = k_start <= q_start + bq - 1
+
+    @pl.when(must)
+    def _compute():
+        k = k_ref[0, :, 0, :].astype(jnp.float32)       # (bk, d)
+        v = v_ref[0, :, 0, :].astype(jnp.float32)
+        for g in range(G):   # G query heads share this kv head (unrolled)
+            q = q_ref[0, :, 0, g, :].astype(jnp.float32)     # (bq, d)
+            do = do_ref[0, :, 0, g, :].astype(jnp.float32)
+            lse = lse_ref[0, 0, g, :].astype(jnp.float32)[:, None]
+            delta = delta_ref[0, 0, g, :].astype(jnp.float32)[:, None]
+            s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                    preferred_element_type=jnp.float32) * scale
+            qpos = q_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+            kpos = k_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+            diff = qpos - kpos
+            mask = jnp.ones((bq, bk), bool)
+            if causal:
+                mask &= diff >= 0
+            if window > 0:
+                mask &= diff < window
+            s = jnp.where(mask, s, NEG_INF)
+            p = jnp.exp(s - lse)                           # (bq, bk)
+            dv_acc[...] += jax.lax.dot_general(
+                p, do, (((0,), (0,)), ((), ())),
+                preferred_element_type=jnp.float32)        # (bk, d)
+            dp = jax.lax.dot_general(do, v, (((1,), (1,)), ((), ())),
+                                     preferred_element_type=jnp.float32)
+            ds = p * (dp - delta) * scale
+            dk_acc[...] += jax.lax.dot_general(
+                ds, q, (((0,), (0,)), ((), ())),
+                preferred_element_type=jnp.float32)
+
+    @pl.when(qi == nq - 1)
+    def _fin():
+        dk_ref[0, :, 0, :] = dk_acc[...].astype(dk_ref.dtype)
+        dv_ref[0, :, 0, :] = dv_acc[...].astype(dv_ref.dtype)
+
+
+def _fwd_with_lse(q, k, v, causal, window, block_q, block_kv, interpret):
+    """Reference-precision forward that also returns the log-sum-exp rows
+    (needed by the bwd kernels). Computed chunk-free in jnp for clarity —
+    the fwd Pallas kernel could emit lse as a second output on TPU."""
+    B, S, H, D = q.shape
+    K, Hkv = k.shape[1], k.shape[2]
+    G = H // Hkv
+    scale = 1.0 / np.sqrt(D)
+    qf = q.astype(jnp.float32).reshape(B, S, Hkv, G, D)
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", qf, k.astype(jnp.float32)) * scale
+    qpos = jnp.arange(S)[:, None] + (K - S)
+    kpos = jnp.arange(K)[None, :]
+    diff = qpos - kpos
+    mask = jnp.ones((S, K), bool)
+    if causal:
+        mask &= diff >= 0
+    if window and window > 0:
+        mask &= diff < window
+    s = jnp.where(mask[None, None, None], s, NEG_INF)
+    lse = jax.nn.logsumexp(s, axis=-1)                       # (B,Hkv,G,S)
+    p = jnp.exp(s - lse[..., None])
+    o = jnp.einsum("bhgqk,bkhd->bqhgd", p, v.astype(jnp.float32))
+    return o.reshape(B, S, H, D).astype(q.dtype), lse
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7))
+def flash_attention_trainable(q, k, v, causal=True, window=0, block_q=128,
+                              block_kv=128, interpret=True):
+    return flash_attention_fwd(q, k, v, causal=causal, window=window,
+                               block_q=block_q, block_kv=block_kv,
+                               interpret=interpret)
+
+
+def _vjp_fwd(q, k, v, causal, window, block_q, block_kv, interpret):
+    o, lse = _fwd_with_lse(q, k, v, causal, window, block_q, block_kv,
+                           interpret)
+    return o, (q, k, v, o, lse)
+
+
+def _vjp_bwd(causal, window, block_q, block_kv, interpret, res, do):
+    q, k, v, o, lse = res
+    B, S, H, D = q.shape
+    K, Hkv = k.shape[1], k.shape[2]
+    G = H // Hkv
+    bq = min(block_q, S)
+    bk = min(block_kv, K)
+    nq, nk = S // bq, K // bk
+    scale = 1.0 / np.sqrt(D)
+    q_offset = K - S
+    delta = (do.astype(jnp.float32) * o.astype(jnp.float32)).sum(-1)  # (B,S,H)
+    delta_h = delta.reshape(B, S, Hkv, G).transpose(0, 2, 3, 1)       # B,Hkv,G,S
+    lse_h = lse                                                        # B,Hkv,G,S
+
+    # --- dq
+    lse_q = lse_h.transpose(0, 3, 1, 2).reshape(B, S, H)   # (B,S,H) per q head
+    delta_q = delta
+    dq = pl.pallas_call(
+        functools.partial(_bwd_dq_kernel, scale=scale, causal=causal,
+                          window=window, bq=bq, bk=bk, nk=nk,
+                          q_offset=q_offset),
+        grid=(B, H, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, bq, 1, D), lambda b, h, qi, ki: (b, qi, h, 0)),
+            pl.BlockSpec((1, bk, 1, D),
+                         lambda b, h, qi, ki, G=G: (b, ki, h // G, 0)),
+            pl.BlockSpec((1, bk, 1, D),
+                         lambda b, h, qi, ki, G=G: (b, ki, h // G, 0)),
+            pl.BlockSpec((1, bq, 1, D), lambda b, h, qi, ki: (b, qi, h, 0)),
+            pl.BlockSpec((1, 1, bq), lambda b, h, qi, ki: (b, h, qi)),
+            pl.BlockSpec((1, 1, bq), lambda b, h, qi, ki: (b, h, qi)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, 1, D), lambda b, h, qi, ki: (b, qi, h, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, S, H, D), q.dtype),
+        scratch_shapes=[pltpu.VMEM((bq, D), jnp.float32)],
+        interpret=interpret,
+    )(q, k, v, do, lse_q.transpose(0, 2, 1), delta_q.transpose(0, 2, 1))
+
+    # --- dk, dv (grouped per kv head)
+    q_g = q.reshape(B, S, Hkv, G, D)
+    do_g = do.reshape(B, S, Hkv, G, D)
+    dk, dv = pl.pallas_call(
+        functools.partial(_bwd_dkv_kernel, scale=scale, causal=causal,
+                          window=window, bq=bq, bk=bk, nq=nq, G=G,
+                          q_offset=q_offset),
+        grid=(B, Hkv, nk, nq),
+        in_specs=[
+            pl.BlockSpec((1, bq, 1, G, D),
+                         lambda b, h, ki, qi: (b, qi, h, 0, 0)),
+            pl.BlockSpec((1, bk, 1, D), lambda b, h, ki, qi: (b, ki, h, 0)),
+            pl.BlockSpec((1, bk, 1, D), lambda b, h, ki, qi: (b, ki, h, 0)),
+            pl.BlockSpec((1, bq, 1, G, D),
+                         lambda b, h, ki, qi: (b, qi, h, 0, 0)),
+            pl.BlockSpec((1, 1, G, bq), lambda b, h, ki, qi: (b, h, 0, qi)),
+            pl.BlockSpec((1, 1, G, bq), lambda b, h, ki, qi: (b, h, 0, qi)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, bk, 1, D), lambda b, h, ki, qi: (b, ki, h, 0)),
+            pl.BlockSpec((1, bk, 1, D), lambda b, h, ki, qi: (b, ki, h, 0)),
+        ],
+        out_shape=[jax.ShapeDtypeStruct((B, K, Hkv, D), k.dtype),
+                   jax.ShapeDtypeStruct((B, K, Hkv, D), v.dtype)],
+        scratch_shapes=[pltpu.VMEM((bk, D), jnp.float32),
+                        pltpu.VMEM((bk, D), jnp.float32)],
+        interpret=interpret,
+    )(q_g, k, v, do_g, lse_h, delta_h)
+    return dq, dk, dv
+
+
+flash_attention_trainable.defvjp(_vjp_fwd, _vjp_bwd)

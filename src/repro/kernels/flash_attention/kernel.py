@@ -1,0 +1,121 @@
+"""Pallas TPU flash attention (fwd): GQA, causal, optional sliding window.
+
+Tiling: grid (B, H, num_q_blocks, num_kv_blocks); the kv dimension is the
+innermost (sequential on TPU), accumulating online-softmax state in VMEM
+scratch; the output block is written on the last kv step.  Causal + window
+blocks that are fully masked are skipped with ``pl.when`` (no MXU work).
+
+Block shapes default to (128, head_dim) q-tiles × (128, head_dim) kv-tiles —
+MXU-aligned for head_dim ∈ {128, 256}.  Validated in interpret mode against
+ref.attention_ref across shapes/dtypes (tests/test_kernels.py).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30  # python float: pallas kernels must not capture array constants
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+                  scale: float, causal: bool, window: int, bq: int, bk: int,
+                  nk: int, q_offset: int):
+    ki = pl.program_id(3)
+    qi = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q_start = qi * bq + q_offset          # absolute position of q block
+    k_start = ki * bk
+    # skip fully-masked blocks (strictly above the causal diagonal or
+    # entirely outside the window)
+    must_compute = True
+    if causal:
+        must_compute = k_start <= q_start + bq - 1
+    if window > 0:
+        must_compute = jnp.logical_and(
+            must_compute, k_start + bk - 1 > q_start - window) \
+            if causal else must_compute
+
+    @pl.when(must_compute)
+    def _compute():
+        q = q_ref[0, :, 0, :].astype(jnp.float32)       # (bq, d)
+        k = k_ref[0, :, 0, :].astype(jnp.float32)       # (bk, d)
+        v = v_ref[0, :, 0, :].astype(jnp.float32)
+        logits = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale  # (bq, bk)
+        qpos = q_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+        kpos = k_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        diff = qpos - kpos
+        mask = jnp.ones((bq, bk), bool)
+        if causal:
+            mask &= diff >= 0
+        if window > 0:
+            mask &= diff < window
+        logits = jnp.where(mask, logits, NEG_INF)
+        m_prev = m_scr[...]
+        l_prev = l_scr[...]
+        m_new = jnp.maximum(m_prev, logits.max(-1, keepdims=True))
+        p = jnp.exp(logits - m_new)
+        corr = jnp.exp(m_prev - m_new)
+        l_new = l_prev * corr + p.sum(-1, keepdims=True)
+        acc_scr[...] = acc_scr[...] * corr + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_scr[...] = m_new
+        l_scr[...] = l_new
+
+    @pl.when(ki == nk - 1)
+    def _finalize():
+        o_ref[0, :, 0, :] = (acc_scr[...] /
+                             jnp.maximum(l_scr[...], 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "block_q",
+                                             "block_kv", "interpret"))
+def flash_attention_fwd(q, k, v, causal: bool = True, window: int = 0,
+                        block_q: int = 128, block_kv: int = 128,
+                        interpret: bool = True):
+    """q: (B, S, H, D); k/v: (B, K, Hkv, D) -> (B, S, H, D)."""
+    B, Sq, H, D = q.shape
+    Kk, Hkv = k.shape[1], k.shape[2]
+    G = H // Hkv
+    bq = min(block_q, Sq)
+    bk = min(block_kv, Kk)
+    assert Sq % bq == 0 and Kk % bk == 0
+    nq, nk = Sq // bq, Kk // bk
+    scale = 1.0 / np.sqrt(D)
+    q_offset = Kk - Sq  # decode alignment: last q attends last k
+
+    kernel = functools.partial(
+        _flash_kernel, scale=scale, causal=causal, window=window,
+        bq=bq, bk=bk, nk=nk, q_offset=q_offset)
+    return pl.pallas_call(
+        kernel,
+        grid=(B, H, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, bq, 1, D), lambda b, h, qi, ki: (b, qi, h, 0)),
+            pl.BlockSpec((1, bk, 1, D),
+                         lambda b, h, qi, ki, G=G: (b, ki, h // G, 0)),
+            pl.BlockSpec((1, bk, 1, D),
+                         lambda b, h, qi, ki, G=G: (b, ki, h // G, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, 1, D), lambda b, h, qi, ki: (b, qi, h, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, Sq, H, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, D), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,23 @@
+"""jit wrapper with impl switch for flash attention."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import flash_attention_fwd
+from .ref import attention_ref
+
+
+def flash_attention(q, k, v, causal: bool = True, window=0,
+                    impl: str = "pallas", interpret: bool = True,
+                    block_q: int = 128, block_kv: int = 128):
+    """Dispatch: "pallas" (TPU kernel; interpret=True on CPU) or "xla" (ref).
+    ``window`` must be a static int for the pallas path (kernel specializes
+    the mask); traced windows fall back to the reference path."""
+    if impl == "pallas" and isinstance(window, (int, type(None))):
+        w = int(window or 0)
+        return flash_attention_fwd(q, k, v, causal=causal, window=w,
+                                   block_q=block_q, block_kv=block_kv,
+                                   interpret=interpret)
+    return attention_ref(q, k, v, causal=causal,
+                         window=int(window) if isinstance(window, int) else 0)

@@ -1,0 +1,31 @@
+"""Pure-jnp oracle for flash attention (GQA, causal, optional window)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+NEG_INF = jnp.float32(-1e30)
+
+
+def attention_ref(q, k, v, causal: bool = True, window: int = 0,
+                  softmax_scale=None):
+    """q: (B, S, H, D); k/v: (B, K, Hkv, D). window<=0 => unbounded."""
+    B, S, H, D = q.shape
+    K, Hkv = k.shape[1], k.shape[2]
+    G = H // Hkv
+    scale = softmax_scale if softmax_scale is not None else 1.0 / np.sqrt(D)
+    qf = q.astype(jnp.float32).reshape(B, S, Hkv, G, D)
+    logits = jnp.einsum("bqhgd,bkhd->bhgqk", qf, k.astype(jnp.float32)) * scale
+    qpos = jnp.arange(S)[:, None]
+    kpos = jnp.arange(K)[None, :]
+    diff = (qpos + (K - S)) - kpos   # align last q with last k
+    mask = jnp.ones((S, K), bool)
+    if causal:
+        mask &= diff >= 0
+    if window and window > 0:
+        mask &= diff < window
+    logits = jnp.where(mask[None, None, None], logits, NEG_INF)
+    p = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", p, v.astype(jnp.float32))
+    return out.reshape(B, S, H, D).astype(q.dtype)

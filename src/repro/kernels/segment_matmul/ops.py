@@ -1,0 +1,13 @@
+"""jit wrapper with impl switch for segment_matmul."""
+from __future__ import annotations
+
+from .kernel import segment_matmul_pallas
+from .ref import segment_matmul_ref
+
+
+def segment_matmul(x, nbr, w, impl: str = "pallas", interpret: bool = True,
+                   block_n: int = 8):
+    if impl == "pallas":
+        return segment_matmul_pallas(x, nbr, w, block_n=block_n,
+                                     interpret=interpret)
+    return segment_matmul_ref(x, nbr, w)

@@ -1,0 +1,18 @@
+"""Pure-jnp oracle: padded-neighbor aggregation + weight transform.
+
+out[n] = (sum_k x[nbr[n, k]]) @ W   with nbr == -1 entries masked.
+This is the GNN message-passing hot loop in padded-CSR form (the form the
+AMPC ternarized graphs and sampled blocks use).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def segment_matmul_ref(x, nbr, w):
+    """x: (N, D); nbr: (N, K) int32 (-1 pad); w: (D, F) -> (N, F)."""
+    safe = jnp.clip(nbr, 0, x.shape[0] - 1)
+    gathered = x[safe]                                   # (N, K, D)
+    gathered = jnp.where((nbr >= 0)[..., None], gathered, 0)
+    agg = gathered.sum(axis=1)                           # (N, D)
+    return agg @ w

@@ -1,0 +1,118 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("_EXTRA_XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=512").strip()
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-4b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both \
+      --out results/dryrun.jsonl
+
+For each cell: ``jit(step).lower(**input_specs)`` then ``.compile()`` on the
+16x16 (single-pod) and 2x16x16 (multi-pod) meshes; records
+``memory_analysis()`` (proves it fits), ``cost_analysis()`` (FLOPs/bytes) and
+the parsed collective schedule for EXPERIMENTS.md §Dry-run/§Roofline.
+"""
+import argparse
+import json
+import time
+import traceback
+
+import jax
+
+
+def run_cell(arch: str, shape: str, multi_pod: bool, skip_reason=None) -> dict:
+    from .mesh import make_production_mesh, n_chips
+    from .specs import build_lowerable
+    from .hlo import analyze_hlo, roofline_terms
+
+    rec = {"arch": arch, "shape": shape,
+           "mesh": "2x16x16" if multi_pod else "16x16"}
+    if skip_reason:
+        rec["status"] = "skipped"
+        rec["reason"] = skip_reason
+        return rec
+    t0 = time.time()
+    try:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+        low = build_lowerable(arch, shape, mesh)
+        lowered = low.lower(mesh)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis()
+        analysis = analyze_hlo(compiled.as_text())
+        chips = n_chips(mesh)
+        terms = roofline_terms(analysis, chips, low.model_flops)
+        terms["xla_cost_flops_unscaled"] = float(cost.get("flops", 0.0))
+        rec.update({
+            "status": "ok",
+            "notes": low.notes,
+            "lower_s": round(t_lower, 1),
+            "compile_s": round(t_compile, 1),
+            "chips": chips,
+            "memory": {
+                "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+                "output_bytes": getattr(mem, "output_size_in_bytes", None),
+                "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+                "generated_code_bytes": getattr(
+                    mem, "generated_code_size_in_bytes", None),
+                # v5e-class chip: 16 GB HBM; arguments live in HBM, outputs
+                # alias donated inputs for train steps
+                "fits_hbm16": (getattr(mem, "argument_size_in_bytes", 0)
+                               + getattr(mem, "temp_size_in_bytes", 0)) < 16e9,
+            },
+            "roofline": terms,
+        })
+    except Exception as e:  # noqa: BLE001 - record the failure verbatim
+        rec["status"] = "error"
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-2000:]
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--mesh", choices=["single", "multi", "both"],
+                    default="single")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default=None)
+    ap.add_argument("--include-skipped", action="store_true")
+    args = ap.parse_args()
+
+    from ..configs.registry import all_cells, get
+
+    cells = []
+    if args.all:
+        for aid, sname, skip in all_cells():
+            cells.append((aid, sname, skip))
+    else:
+        entry = get(args.arch)
+        shapes = [args.shape] if args.shape else list(entry.shapes)
+        for sname in shapes:
+            cells.append((args.arch, sname, entry.skip_shapes.get(sname)))
+
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+    out_f = open(args.out, "a") if args.out else None
+    for aid, sname, skip in cells:
+        for mp in meshes:
+            rec = run_cell(aid, sname, mp, skip_reason=skip)
+            line = json.dumps(rec)
+            print(line if rec["status"] != "ok" else
+                  f"OK {aid} {sname} {rec['mesh']} "
+                  f"compile={rec['compile_s']}s "
+                  f"dom={rec['roofline']['dominant']} "
+                  f"roofline={rec['roofline']['roofline_fraction']:.3f}",
+                  flush=True)
+            if out_f:
+                out_f.write(line + "\n")
+                out_f.flush()
+    if out_f:
+        out_f.close()
+
+
+if __name__ == "__main__":
+    main()

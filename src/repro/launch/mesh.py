@@ -1,0 +1,26 @@
+"""Production mesh construction.
+
+A function (not a module-level constant) so importing never touches jax
+device state.  Single pod: 16x16 = 256 chips ("data", "model").  Multi-pod:
+2x16x16 = 512 chips ("pod", "data", "model") — data parallel across pods
+(gradient all-reduce over the slower inter-pod links), TP inside.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def data_axes(mesh) -> tuple:
+    """The batch-sharding axes for this mesh (pod folded into data)."""
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+def n_chips(mesh) -> int:
+    import numpy as np
+    return int(np.prod(list(mesh.shape.values())))

@@ -1,0 +1,172 @@
+"""GSPMD sharding rules for every architecture family.
+
+Strategy (baseline, see EXPERIMENTS.md §Perf for the hill-climbed variants):
+
+LM params (Megatron-TP x ZeRO-FSDP):
+  * attention/MLP in-projections  (d, out):  P("data", "model")
+  * attention/MLP out-projections (in, d):   P("model", "data")
+  * MoE experts (E, d, f):                   P(None, "data", "model")
+  * embedding (V, d):                        P("model", "data")   [vocab-TP]
+  * lm_head (d, V):                          P("data", "model")
+  * norms / biases / scalars:                replicated
+  optimizer state inherits the param rule (ZeRO: state lives sharded).
+
+LM batch: tokens (B, S) -> P(dp, None) with dp = ("pod","data")|("data",).
+KV cache: B >= |dp| -> batch-sharded; B == 1 (long_500k) -> sequence-sharded
+cache + head_dim over "model" (all head_dims divide 16).
+
+GNN: node/edge arrays sharded over ALL axes flattened (pure data parallel on
+segments); params replicated (they are tiny relative to the graph).
+
+RecSys: embedding rows over "model" (the sharded DHT), batch over dp.
+"""
+from __future__ import annotations
+
+import re
+from typing import Any
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from .mesh import data_axes
+
+
+# --------------------------------------------------------------------------
+# LM parameter rules (path-pattern -> spec builder)
+# --------------------------------------------------------------------------
+def lm_param_spec(path: str, ndim: int, dp) -> P:
+    """path: '/'-joined key path of the param leaf (layer-stacked params have
+    a leading L dim — rules below index from the right)."""
+    def stacked(*spec):
+        # layer-stacked leaves have one extra leading dim (replicated)
+        pad = ndim - len(spec)
+        return P(*([None] * pad), *spec)
+
+    if re.search(r"embed$", path):
+        return P("model", dp)
+    if re.search(r"lm_head$", path):
+        return P(dp, "model")
+    if re.search(r"attn/(wq|wk|wv)$", path):
+        return stacked(dp, "model")
+    if re.search(r"attn/wo$", path):
+        return stacked("model", dp)
+    if re.search(r"mlp/(w_gate|w_up)$", path):
+        return stacked(dp, "model")
+    if re.search(r"mlp/w_down$", path):
+        return stacked("model", dp)
+    if re.search(r"moe/(w_gate|w_up)$", path):
+        return stacked(None, dp, "model")
+    if re.search(r"moe/w_down$", path):
+        return stacked(None, "model", dp)
+    if re.search(r"moe/shared/(w_gate|w_up)$", path):
+        return stacked(dp, "model")
+    if re.search(r"moe/shared/w_down$", path):
+        return stacked("model", dp)
+    if re.search(r"moe/router$", path):
+        return stacked(dp, None)
+    return P()  # norms, biases, scalars: replicated
+
+
+def _tree_paths(tree):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    out = []
+    for path, leaf in flat:
+        keys = []
+        for p in path:
+            if hasattr(p, "key"):
+                keys.append(str(p.key))
+            elif hasattr(p, "idx"):
+                keys.append(str(p.idx))
+            else:
+                keys.append(str(p))
+        out.append(("/".join(keys), leaf))
+    return out, treedef
+
+
+def lm_param_shardings(mesh, params_shape) -> Any:
+    """Map a params (or optimizer-state) shape pytree to NamedShardings."""
+    dp = data_axes(mesh)
+    dp = dp if len(dp) > 1 else dp[0]
+    flat, treedef = _tree_paths(params_shape)
+    shardings = []
+    for path, leaf in flat:
+        if not hasattr(leaf, "ndim") or leaf.ndim == 0:
+            shardings.append(NamedSharding(mesh, P()))
+            continue
+        spec = lm_param_spec(path, leaf.ndim, dp)
+        # drop axes that do not divide evenly (fallback to replicated там)
+        spec = _fix_divisibility(spec, leaf.shape, mesh)
+        shardings.append(NamedSharding(mesh, spec))
+    return jax.tree_util.tree_unflatten(treedef, shardings)
+
+
+def _axis_size(mesh, axis) -> int:
+    if axis is None:
+        return 1
+    if isinstance(axis, (tuple, list)):
+        return int(np.prod([mesh.shape[a] for a in axis]))
+    return mesh.shape[axis]
+
+
+def _fix_divisibility(spec: P, shape, mesh) -> P:
+    fixed = []
+    for i, axis in enumerate(spec):
+        if axis is None or i >= len(shape):
+            fixed.append(None)
+            continue
+        if shape[i] % _axis_size(mesh, axis) == 0:
+            fixed.append(axis)
+        else:
+            fixed.append(None)
+    return P(*fixed)
+
+
+def replicated(mesh, tree):
+    return jax.tree.map(lambda _: NamedSharding(mesh, P()), tree)
+
+
+def batch_sharding(mesh, ndim: int, batch_axis: int = 0):
+    dp = data_axes(mesh)
+    dp = dp if len(dp) > 1 else dp[0]
+    spec = [None] * ndim
+    spec[batch_axis] = dp
+    return NamedSharding(mesh, P(*spec))
+
+
+def kv_cache_shardings(mesh, cache_shape, global_batch: int):
+    """cache k/v: (L, B, S, Hkv, hd)."""
+    dp = data_axes(mesh)
+    dp_size = int(np.prod([mesh.shape[a] for a in dp]))
+    dpx = dp if len(dp) > 1 else dp[0]
+    L, B, S, Hkv, hd = cache_shape
+    if global_batch >= dp_size and global_batch % dp_size == 0:
+        spec = P(None, dpx, None, None,
+                 "model" if hd % mesh.shape["model"] == 0 else None)
+    else:
+        # long-context single stream: sequence-parallel cache
+        seq_ax = "data" if S % mesh.shape["data"] == 0 else None
+        spec = P(None, None, seq_ax, None,
+                 "model" if hd % mesh.shape["model"] == 0 else None)
+    return NamedSharding(mesh, spec)
+
+
+def flat_shard(mesh, ndim: int, axis: int = 0):
+    """Shard dim `axis` over ALL mesh axes (GNN node/edge arrays)."""
+    all_axes = tuple(mesh.axis_names)
+    spec = [None] * ndim
+    spec[axis] = all_axes
+    return NamedSharding(mesh, P(*spec))
+
+
+def rec_param_shardings(mesh, params_shape):
+    dp = data_axes(mesh)
+    dp = dp if len(dp) > 1 else dp[0]
+    flat, treedef = _tree_paths(params_shape)
+    out = []
+    for path, leaf in flat:
+        if path.endswith("item_embed") and leaf.shape[0] % mesh.shape["model"] == 0:
+            out.append(NamedSharding(mesh, P("model", None)))
+        else:
+            out.append(NamedSharding(mesh, P()))
+    return jax.tree_util.tree_unflatten(treedef, out)

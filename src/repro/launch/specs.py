@@ -1,0 +1,295 @@
+"""input_specs + lowerable step construction for every (arch x shape) cell.
+
+Everything here is ShapeDtypeStruct-based: no device allocation.  Each cell
+resolves to a ``Lowerable``: a jittable function, ShapeDtypeStruct args,
+in/out shardings, and metadata (MODEL_FLOPS etc. for the roofline).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..configs.registry import ArchEntry, get
+from ..configs.shapes import ShapeSpec, sampled_block_sizes
+from ..models import transformer as tr
+from ..models.gnn.common import GraphBatch
+from ..optim import adamw
+from . import steps
+from .mesh import data_axes, n_chips
+from .sharding import (batch_sharding, flat_shard, kv_cache_shardings,
+                       lm_param_shardings, rec_param_shardings, replicated)
+
+S = jax.ShapeDtypeStruct
+
+
+@dataclasses.dataclass
+class Lowerable:
+    arch_id: str
+    shape_name: str
+    fn: Callable
+    args: Tuple
+    in_shardings: Any
+    out_shardings: Any
+    donate_argnums: Tuple[int, ...]
+    model_flops: float          # 6·N·D train / 2·N·D inference (active params)
+    notes: str = ""
+
+    def lower(self, mesh):
+        jitted = jax.jit(self.fn, in_shardings=self.in_shardings,
+                         out_shardings=self.out_shardings,
+                         donate_argnums=self.donate_argnums)
+        return jitted.lower(*self.args)
+
+
+def _pad_to(x: int, mult: int) -> int:
+    return int(int(np.ceil(x / mult)) * mult)
+
+
+def _opt_cfg() -> adamw.AdamWConfig:
+    return adamw.AdamWConfig()
+
+
+# --------------------------------------------------------------------------
+# LM cells
+# --------------------------------------------------------------------------
+def _lm_lowerable(entry: ArchEntry, shape: ShapeSpec, mesh,
+                  overrides=None) -> Lowerable:
+    cfg: tr.TransformerConfig = entry.config
+    dpn = int(np.prod([mesh.shape[a] for a in data_axes(mesh)]))
+    B, SL = shape.global_batch, shape.seq_len
+    sctx = tr.ShardCtx(mesh, data_axes(mesh))
+    if shape.kind == "train":
+        cfg = dataclasses.replace(cfg, remat="dots")
+    opt_overrides = {}
+    if overrides:
+        overrides = dict(overrides)
+        for k in list(overrides):
+            if k.startswith("opt_"):
+                opt_overrides[k[4:]] = overrides.pop(k)
+        cfg = dataclasses.replace(cfg, **overrides)
+    params_shape = jax.eval_shape(
+        functools.partial(tr.init_params, cfg, dtype=jnp.bfloat16),
+        jax.random.PRNGKey(0))
+    p_sh = lm_param_shardings(mesh, params_shape)
+    n_active = cfg.active_param_count()
+
+    if shape.kind == "train":
+        opt_cfg = dataclasses.replace(_opt_cfg(), **opt_overrides)
+        opt_shape = jax.eval_shape(
+            functools.partial(adamw.init_state, cfg=opt_cfg), params_shape)
+        o_sh = {"m": lm_param_shardings(mesh, opt_shape["m"]),
+                "v": lm_param_shardings(mesh, opt_shape["v"]),
+                "step": NamedSharding(mesh, P())}
+        tok = S((B, SL), jnp.int32)
+        b_sh = batch_sharding(mesh, 2)
+        fn = functools.partial(steps.lm_train_step, cfg, opt_cfg,
+                               sctx=sctx)
+        metrics_sh = {k: NamedSharding(mesh, P()) for k in
+                      ["loss", "nll", "aux", "lr", "grad_norm"]}
+        return Lowerable(
+            entry.arch_id, shape.name, fn,
+            (params_shape, opt_shape, tok, tok),
+            (p_sh, o_sh, b_sh, b_sh), (p_sh, o_sh, metrics_sh), (0, 1),
+            model_flops=6.0 * n_active * B * SL)
+
+    if shape.kind == "prefill":
+        tok = S((B, SL), jnp.int32)
+        b_sh = batch_sharding(mesh, 2)
+        fn = functools.partial(steps.lm_prefill_step, cfg, sctx=sctx)
+        return Lowerable(
+            entry.arch_id, shape.name, fn, (params_shape, tok),
+            (p_sh, b_sh), None, (),
+            model_flops=2.0 * n_active * B * SL)
+
+    # decode
+    cache_shape = steps.lm_cache_shape(cfg, B, SL)
+    cache = {"k": S(cache_shape, jnp.bfloat16),
+             "v": S(cache_shape, jnp.bfloat16),
+             "length": S((B,), jnp.int32)}
+    c_sh = {"k": kv_cache_shardings(mesh, cache_shape, B),
+            "v": kv_cache_shardings(mesh, cache_shape, B),
+            "length": NamedSharding(mesh, P())}
+    tok = S((B,), jnp.int32)
+    t_sh = (batch_sharding(mesh, 1) if B % dpn == 0 and B >= dpn
+            else NamedSharding(mesh, P()))
+    fn = functools.partial(steps.lm_decode_step, cfg, sctx=sctx)
+    return Lowerable(
+        entry.arch_id, shape.name, fn, (params_shape, cache, tok),
+        (p_sh, c_sh, t_sh), None, (1,),
+        model_flops=2.0 * n_active * B,
+        notes=f"cache_len={cache_shape[2]}")
+
+
+# --------------------------------------------------------------------------
+# GNN cells
+# --------------------------------------------------------------------------
+def _gnn_batch_struct(entry: ArchEntry, shape: ShapeSpec, mesh
+                      ) -> Tuple[GraphBatch, GraphBatch]:
+    """Returns (batch of ShapeDtypeStructs, batch of shardings)."""
+    chips = n_chips(mesh)
+    if shape.kind == "gnn_sampled":
+        n_nodes, n_edges_dir = sampled_block_sizes(shape)
+        n_graphs = 1
+        d_feat = shape.d_feat
+    elif shape.kind == "gnn_batched":
+        n_nodes = shape.n_nodes * shape.n_graphs
+        n_edges_dir = 2 * shape.n_edges * shape.n_graphs
+        n_graphs = shape.n_graphs
+        d_feat = 64
+    else:
+        n_nodes = shape.n_nodes
+        n_edges_dir = 2 * shape.n_edges
+        n_graphs = 1
+        d_feat = shape.d_feat
+    N = _pad_to(n_nodes, chips)
+    E = _pad_to(n_edges_dir, chips)
+    arch = entry.arch_id
+    fs = functools.partial(flat_shard, mesh)
+    rep = NamedSharding(mesh, P())
+    node_feat = positions = species = None
+    nf_sh = pos_sh = sp_sh = None
+    if arch in ("gcn-cora", "gin-tu"):
+        df = d_feat   # the cell's dataset feature width drives the input dim
+        node_feat = S((N, df), jnp.float32); nf_sh = fs(2)
+    else:  # schnet / mace consume positions + species
+        positions = S((N, 3), jnp.float32); pos_sh = fs(2)
+        species = S((N,), jnp.int32); sp_sh = fs(1)
+    if arch == "gcn-cora":       # node classification
+        labels, lab_sh = S((N,), jnp.int32), fs(1)
+    elif arch == "gin-tu":       # graph classification
+        labels, lab_sh = S((n_graphs,), jnp.int32), rep
+    else:                        # energies per graph
+        labels, lab_sh = S((n_graphs,), jnp.float32), rep
+    batch = GraphBatch(
+        senders=S((E,), jnp.int32), receivers=S((E,), jnp.int32),
+        node_mask=S((N,), jnp.bool_), edge_mask=S((E,), jnp.bool_),
+        graph_ids=S((N,), jnp.int32), n_graphs=n_graphs,
+        node_feat=node_feat, positions=positions, species=species,
+        labels=labels)
+    shard = GraphBatch(
+        senders=fs(1), receivers=fs(1), node_mask=fs(1), edge_mask=fs(1),
+        graph_ids=fs(1), n_graphs=n_graphs, node_feat=nf_sh,
+        positions=pos_sh, species=sp_sh, labels=lab_sh)
+    return batch, shard
+
+
+def _gnn_flops(entry: ArchEntry, cfg, batch: GraphBatch) -> float:
+    """Analytic useful-FLOPs estimate, per family (fwd+bwd ~ 3x fwd):
+    GCN/GIN: per-edge add (2d) + per-node dense transform;
+    SchNet:  per-edge filter MLP + cfconv; MACE: per-edge radial MLPs +
+    moment accumulation over 13 tensor components."""
+    E = batch.senders.shape[0]
+    N = batch.node_mask.shape[0]
+    arch = entry.arch_id
+    if arch == "gcn-cora":
+        d_in, d = cfg.d_feat, cfg.d_hidden
+        fwd = E * 2 * (d + cfg.n_classes) + N * 2 * (d_in * d + d * cfg.n_classes)
+    elif arch == "gin-tu":
+        d_in, d = cfg.d_feat, cfg.d_hidden
+        fwd = cfg.n_layers * (E * 2 * d + N * 4 * d * d) + N * 2 * d_in * d
+    elif arch == "schnet":
+        d, r = cfg.d_hidden, cfg.n_rbf
+        fwd = cfg.n_interactions * (E * 2 * (r * d + d * d + d)
+                                    + N * 4 * d * d)
+    else:  # mace
+        d, r = cfg.d_hidden, cfg.n_rbf
+        per_edge = 3 * 2 * (r * d + d * d) + 2 * d * 13   # radial MLPs + moments
+        per_node = 6 * d * d + 6 * 2 * d * 13             # updates + B-features
+        fwd = cfg.n_layers * (E * per_edge + N * per_node)
+    return 3.0 * fwd
+
+
+def _gnn_lowerable(entry: ArchEntry, shape: ShapeSpec, mesh) -> Lowerable:
+    cfg = entry.config
+    if entry.arch_id in ("gcn-cora", "gin-tu"):
+        # input layer width follows the cell's dataset
+        df = (shape.d_feat if shape.kind in ("gnn_full", "gnn_sampled")
+              else 64)
+        cfg = dataclasses.replace(cfg, d_feat=df)
+    params_shape = jax.eval_shape(
+        functools.partial(steps.GNN_MODULES[entry.arch_id].init_params, cfg),
+        jax.random.PRNGKey(0))
+    p_sh = replicated(mesh, params_shape)
+    opt_shape = jax.eval_shape(adamw.init_state, params_shape)
+    o_sh = replicated(mesh, opt_shape)
+    batch, b_sh = _gnn_batch_struct(entry, shape, mesh)
+    fn = functools.partial(steps.gnn_train_step, entry.arch_id, cfg, _opt_cfg())
+    metric_keys = {"gcn-cora": ["loss", "nll"], "gin-tu": ["loss", "nll"],
+                   "schnet": ["loss", "mse"], "mace": ["loss", "mse"]}
+    m_sh = {k: NamedSharding(mesh, P()) for k in
+            metric_keys[entry.arch_id] + ["lr", "grad_norm"]}
+    return Lowerable(
+        entry.arch_id, shape.name, fn,
+        (params_shape, opt_shape, batch),
+        (p_sh, o_sh, b_sh), (p_sh, o_sh, m_sh), (0, 1),
+        model_flops=_gnn_flops(entry, cfg, batch))
+
+
+# --------------------------------------------------------------------------
+# RecSys cells
+# --------------------------------------------------------------------------
+def _rec_lowerable(entry: ArchEntry, shape: ShapeSpec, mesh) -> Lowerable:
+    cfg = entry.config
+    params_shape = jax.eval_shape(
+        functools.partial(__import__("repro.models.sasrec",
+                                     fromlist=["init_params"]).init_params,
+                          cfg), jax.random.PRNGKey(0))
+    p_sh = rec_param_shardings(mesh, params_shape)
+    B = shape.global_batch
+    dpn = int(np.prod([mesh.shape[a] for a in data_axes(mesh)]))
+    seq = S((B, cfg.seq_len), jnp.int32)
+    b2 = (batch_sharding(mesh, 2) if B % dpn == 0 and B >= dpn
+          else NamedSharding(mesh, P()))
+    d_model_flops = 2.0 * cfg.embed_dim * cfg.embed_dim * 10  # per token blocks
+    if shape.kind == "rec_train":
+        opt_shape = jax.eval_shape(adamw.init_state, params_shape)
+        o_sh = {"m": rec_param_shardings(mesh, opt_shape["m"]),
+                "v": rec_param_shardings(mesh, opt_shape["v"]),
+                "step": NamedSharding(mesh, P())}
+        fn = functools.partial(steps.rec_train_step, cfg, _opt_cfg())
+        m_sh = {k: NamedSharding(mesh, P()) for k in ["loss", "bpr", "lr",
+                                                      "grad_norm"]}
+        return Lowerable(entry.arch_id, shape.name, fn,
+                         (params_shape, opt_shape, seq, seq, seq),
+                         (p_sh, o_sh, b2, b2, b2), (p_sh, o_sh, m_sh), (0, 1),
+                         model_flops=3 * B * cfg.seq_len * d_model_flops)
+    if shape.kind == "rec_serve":
+        n_cand = 1024
+        cand = S((B, n_cand), jnp.int32)
+        fn = functools.partial(steps.rec_serve_step, cfg)
+        return Lowerable(entry.arch_id, shape.name, fn,
+                         (params_shape, seq, cand), (p_sh, b2, b2), None, (),
+                         model_flops=B * (cfg.seq_len * d_model_flops
+                                          + 2 * n_cand * cfg.embed_dim))
+    # retrieval: 1 user against the full table
+    fn = functools.partial(steps.rec_retrieval_step, cfg)
+    return Lowerable(entry.arch_id, shape.name, fn,
+                     (params_shape, seq), (p_sh, NamedSharding(mesh, P())),
+                     None, (),
+                     model_flops=B * (cfg.seq_len * d_model_flops
+                                      + 2 * cfg.n_items * cfg.embed_dim))
+
+
+# --------------------------------------------------------------------------
+def build_lowerable(arch_id: str, shape_name: str, mesh,
+                    overrides=None) -> Lowerable:
+    entry = get(arch_id)
+    shape = entry.shapes[shape_name]
+    if entry.family == "lm":
+        return _lm_lowerable(entry, shape, mesh, overrides=overrides)
+    if entry.family == "gnn":
+        return _gnn_lowerable(entry, shape, mesh)
+    return _rec_lowerable(entry, shape, mesh)
+
+
+def input_specs(arch_id: str, shape_name: str, mesh):
+    """ShapeDtypeStruct stand-ins for every model input of a cell (the
+    pattern named in the brief): returns the args tuple the dry-run lowers
+    with — weak-type-correct, shardable, no device allocation."""
+    return build_lowerable(arch_id, shape_name, mesh).args

@@ -1,0 +1,137 @@
+"""Jittable step functions for every architecture family.
+
+These are what the launcher jits and the dry-run lowers:
+  * lm_train_step    — fwd + bwd + AdamW update (donated params/opt)
+  * lm_prefill_step  — build KV cache + last-position logits
+  * lm_decode_step   — one token against a (possibly ring) KV cache
+  * gnn_train_step   — loss + grads + AdamW for the four GNN archs
+  * rec_train_step / rec_serve_step / rec_retrieval_step
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from ..models import transformer as tr
+from ..models import sasrec as sr
+from ..models.gnn import gcn, gin, mace, schnet
+from ..models.gnn.common import GraphBatch
+from ..optim import adamw
+
+# register GraphBatch as a pytree (n_graphs static)
+try:
+    jax.tree_util.register_dataclass(
+        GraphBatch,
+        data_fields=["senders", "receivers", "node_mask", "edge_mask",
+                     "graph_ids", "node_feat", "positions", "species",
+                     "labels"],
+        meta_fields=["n_graphs"])
+except ValueError:
+    pass  # already registered
+
+GNN_MODULES = {"gcn-cora": gcn, "gin-tu": gin, "schnet": schnet, "mace": mace}
+
+
+# --------------------------------------------------------------------------
+# LM
+# --------------------------------------------------------------------------
+def lm_train_step(cfg: tr.TransformerConfig, opt_cfg: adamw.AdamWConfig,
+                  params, opt_state, tokens, labels, sctx=None):
+    n_micro = max(cfg.n_microbatches, 1)
+    if n_micro == 1:
+        (loss, metrics), grads = jax.value_and_grad(
+            lambda p: tr.loss_fn(cfg, p, tokens, labels, sctx=sctx),
+            has_aux=True)(params)
+    else:
+        # gradient accumulation: scan over microbatches (activation memory
+        # divided by n_micro; the optimizer update stays one step)
+        B = tokens.shape[0]
+        assert B % n_micro == 0
+        mb = B // n_micro
+        tk = tokens.reshape(n_micro, mb, -1)
+        lb = labels.reshape(n_micro, mb, -1)
+
+        def one(p, t_l):
+            t, l = t_l
+            (loss, m), g = jax.value_and_grad(
+                lambda pp: tr.loss_fn(cfg, pp, t, l, sctx=sctx),
+                has_aux=True)(p)
+            return (loss, m), g
+
+        def scan_fn(carry, t_l):
+            acc_g, acc_loss, acc_aux = carry
+            (loss, m), g = one(params, t_l)
+            acc_g = jax.tree.map(lambda a, b: a + b, acc_g, g)
+            return (acc_g, acc_loss + loss, acc_aux + m["aux"]), None
+
+        zero_g = jax.tree.map(
+            lambda x: jnp.zeros(x.shape, jnp.float32), params)
+        (gsum, loss_sum, aux_sum), _ = jax.lax.scan(
+            scan_fn, (zero_g, jnp.float32(0), jnp.float32(0)), (tk, lb))
+        grads = jax.tree.map(lambda g: g / n_micro, gsum)
+        loss = loss_sum / n_micro
+        metrics = {"nll": loss, "aux": aux_sum / n_micro}
+    params, opt_state, opt_metrics = adamw.apply_updates(
+        opt_cfg, params, grads, opt_state)
+    return params, opt_state, {"loss": loss, **metrics, **opt_metrics}
+
+
+def lm_prefill_step(cfg: tr.TransformerConfig, params, tokens, sctx=None):
+    return tr.prefill(cfg, params, tokens, sctx=sctx)
+
+
+def lm_decode_step(cfg: tr.TransformerConfig, params, cache, token, sctx=None):
+    return tr.decode_step(cfg, params, cache, token, sctx=sctx)
+
+
+def lm_cache_shape(cfg: tr.TransformerConfig, batch: int, seq_len: int):
+    """Allocated KV-cache length: bounded by the window when every layer is
+    windowed (mixtral); full length if any layer is global (gemma3)."""
+    if cfg.sliding_window > 0 and cfg.local_global_ratio == 0:
+        S = min(seq_len, cfg.sliding_window)
+    else:
+        S = seq_len
+    return (cfg.n_layers, batch, S, cfg.n_kv_heads, cfg.head_dim)
+
+
+# --------------------------------------------------------------------------
+# GNN
+# --------------------------------------------------------------------------
+def gnn_train_step(arch_id: str, cfg, opt_cfg: adamw.AdamWConfig,
+                   params, opt_state, batch: GraphBatch):
+    mod = GNN_MODULES[arch_id]
+    (loss, metrics), grads = jax.value_and_grad(
+        lambda p: mod.loss_fn(cfg, p, batch), has_aux=True)(params)
+    params, opt_state, opt_metrics = adamw.apply_updates(
+        opt_cfg, params, grads, opt_state)
+    return params, opt_state, {"loss": loss, **metrics, **opt_metrics}
+
+
+def gnn_forward_step(arch_id: str, cfg, params, batch: GraphBatch):
+    return GNN_MODULES[arch_id].forward(cfg, params, batch)
+
+
+# --------------------------------------------------------------------------
+# RecSys
+# --------------------------------------------------------------------------
+def rec_train_step(cfg: sr.SASRecConfig, opt_cfg: adamw.AdamWConfig,
+                   params, opt_state, item_seq, pos_items, neg_items):
+    (loss, metrics), grads = jax.value_and_grad(
+        lambda p: sr.loss_fn(cfg, p, item_seq, pos_items, neg_items),
+        has_aux=True)(params)
+    params, opt_state, opt_metrics = adamw.apply_updates(
+        opt_cfg, params, grads, opt_state)
+    return params, opt_state, {"loss": loss, **metrics, **opt_metrics}
+
+
+def rec_serve_step(cfg: sr.SASRecConfig, params, item_seq, candidates):
+    states = sr.encode(cfg, params, item_seq)
+    return sr.score_candidates(cfg, params, states[:, -1], candidates)
+
+
+def rec_retrieval_step(cfg: sr.SASRecConfig, params, item_seq):
+    states = sr.encode(cfg, params, item_seq)
+    return sr.retrieval_scores(cfg, params, states[:, -1])

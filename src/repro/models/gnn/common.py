@@ -1,0 +1,94 @@
+"""GNN substrate: segment-op message passing over edge lists.
+
+JAX has no CSR SpMM — message passing is gather (edge source features) →
+edge transform → ``jax.ops.segment_sum`` scatter, exactly the DHT query-wave
+pattern of the AMPC core (see DESIGN.md §4).  Batched small graphs use
+padding + masks; large graphs shard the edge list across the mesh.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass
+class GraphBatch:
+    """Padded, statically-shaped graph batch.
+
+    senders/receivers: (E,) int32 (-pad edges point at node N, masked)
+    node_feat: (N, F) float or None
+    positions: (N, 3) float or None; species: (N,) int or None
+    node_mask: (N,) bool; edge_mask: (E,) bool
+    graph_ids: (N,) int32 (graph membership for readout); n_graphs: int
+    labels: optional (N,) or (n_graphs,) int targets
+    """
+    senders: jnp.ndarray
+    receivers: jnp.ndarray
+    node_mask: jnp.ndarray
+    edge_mask: jnp.ndarray
+    graph_ids: jnp.ndarray
+    n_graphs: int
+    node_feat: Optional[jnp.ndarray] = None
+    positions: Optional[jnp.ndarray] = None
+    species: Optional[jnp.ndarray] = None
+    labels: Optional[jnp.ndarray] = None
+
+    @property
+    def n_nodes(self) -> int:
+        return int(self.node_mask.shape[0])
+
+
+def scatter_sum(edge_vals, receivers, n_nodes, edge_mask=None):
+    if edge_mask is not None:
+        edge_vals = jnp.where(edge_mask[(...,) + (None,) * (edge_vals.ndim - 1)],
+                              edge_vals, 0)
+    return jax.ops.segment_sum(edge_vals, receivers, num_segments=n_nodes)
+
+
+def gather(node_vals, idx):
+    return jnp.take(node_vals, idx, axis=0)
+
+
+def degree(receivers, n_nodes, edge_mask=None):
+    ones = jnp.ones(receivers.shape[0], jnp.float32)
+    return scatter_sum(ones, receivers, n_nodes, edge_mask)
+
+
+def graph_readout(node_vals, graph_ids, n_graphs, node_mask, op="sum"):
+    vals = jnp.where(node_mask[(...,) + (None,) * (node_vals.ndim - 1)],
+                     node_vals, 0)
+    s = jax.ops.segment_sum(vals, graph_ids, num_segments=n_graphs)
+    if op == "sum":
+        return s
+    cnt = jax.ops.segment_sum(node_mask.astype(jnp.float32), graph_ids,
+                              num_segments=n_graphs)
+    return s / jnp.maximum(cnt[:, None], 1.0)
+
+
+def init_linear(key, d_in, d_out, dtype=jnp.float32, bias=True):
+    k1, _ = jax.random.split(key)
+    p = {"w": jax.random.normal(k1, (d_in, d_out), dtype) / np.sqrt(d_in)}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), dtype)
+    return p
+
+
+def linear(p, x):
+    y = x @ p["w"].astype(x.dtype)
+    if "b" in p:
+        y = y + p["b"].astype(x.dtype)
+    return y
+
+
+def init_mlp2(key, d_in, d_hidden, d_out, dtype=jnp.float32):
+    k1, k2 = jax.random.split(key)
+    return {"l1": init_linear(k1, d_in, d_hidden, dtype),
+            "l2": init_linear(k2, d_hidden, d_out, dtype)}
+
+
+def mlp2(p, x, act=jax.nn.silu):
+    return linear(p["l2"], act(linear(p["l1"], x)))

@@ -1,0 +1,58 @@
+"""GIN (Xu et al., arXiv:1810.00826) — gin-tu config:
+5 layers, d_hidden=64, sum aggregator, learnable eps, graph classification."""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from .common import (GraphBatch, gather, graph_readout, init_mlp2, mlp2,
+                     scatter_sum, init_linear, linear)
+
+
+@dataclasses.dataclass(frozen=True)
+class GINConfig:
+    name: str = "gin-tu"
+    n_layers: int = 5
+    d_feat: int = 64
+    d_hidden: int = 64
+    n_classes: int = 2
+    dtype: object = jnp.float32
+
+
+def init_params(cfg: GINConfig, key):
+    keys = jax.random.split(key, cfg.n_layers + 1)
+    layers = []
+    d_in = cfg.d_feat
+    for i in range(cfg.n_layers):
+        layers.append({
+            "mlp": init_mlp2(keys[i], d_in, cfg.d_hidden, cfg.d_hidden, cfg.dtype),
+            "eps": jnp.zeros((), cfg.dtype),
+        })
+        d_in = cfg.d_hidden
+    return {"layers": layers,
+            "readout": init_linear(keys[-1], cfg.d_hidden, cfg.n_classes,
+                                   cfg.dtype)}
+
+
+def forward(cfg: GINConfig, params, batch: GraphBatch):
+    n = batch.n_nodes
+    x = batch.node_feat.astype(cfg.dtype)
+    for layer in params["layers"]:
+        msg = gather(x, batch.senders)
+        agg = scatter_sum(msg, batch.receivers, n, batch.edge_mask)
+        x = mlp2(layer["mlp"], (1.0 + layer["eps"]) * x + agg,
+                 act=jax.nn.relu)
+    pooled = graph_readout(x, batch.graph_ids, batch.n_graphs,
+                           batch.node_mask, op="sum")
+    return linear(params["readout"], pooled)  # (n_graphs, n_classes)
+
+
+def loss_fn(cfg: GINConfig, params, batch: GraphBatch):
+    logits = forward(cfg, params, batch).astype(jnp.float32)
+    labels = batch.labels  # (n_graphs,)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[:, None], axis=-1)[:, 0]
+    nll = (logz - gold).mean()
+    return nll, {"nll": nll}

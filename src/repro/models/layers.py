@@ -1,0 +1,294 @@
+"""Shared transformer building blocks (pure functions, params = pytrees).
+
+Covers the features needed by the assigned LM architectures:
+  * GQA (n_kv_heads < n_heads), optional QKV bias (qwen2.5)
+  * qk-norm (qwen3, gemma3)
+  * RoPE
+  * sliding-window attention + local:global layer patterns (gemma3, mixtral)
+  * RMSNorm, SwiGLU
+Attention has an impl switch: "xla" (reference einsum path — used by the
+dry-run/roofline) or "pallas" (flash kernel, TPU target, validated in
+interpret mode).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+NEG_INF = jnp.float32(-1e30)
+
+
+def rms_norm(x, scale, eps: float = 1e-6):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    return ((x * jax.lax.rsqrt(var + eps)) * (1.0 + scale.astype(jnp.float32))).astype(dt)
+
+
+def rope_freqs(head_dim: int, theta: float):
+    return 1.0 / (theta ** (np.arange(0, head_dim, 2) / head_dim))
+
+
+def apply_rope(x, positions, theta: float = 10000.0):
+    """x: (..., S, H, D); positions: (..., S)."""
+    d = x.shape[-1]
+    freqs = jnp.asarray(rope_freqs(d, theta), jnp.float32)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (..., S, D/2)
+    cos = jnp.cos(ang)[..., None, :]
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def make_attention_mask(q_pos, k_pos, window: Optional[jnp.ndarray] = None,
+                        causal: bool = True):
+    """(..., Q, K) boolean mask. window: scalar or per-layer traced value;
+    <=0 or None means unbounded."""
+    diff = q_pos[..., :, None] - k_pos[..., None, :]
+    mask = jnp.ones(diff.shape, bool)
+    if causal:
+        mask &= diff >= 0
+    if window is not None:
+        w = jnp.asarray(window)
+        mask &= jnp.where(w > 0, diff < w, True)
+    return mask
+
+
+def attention_xla_chunked(q, k, v, q_pos, k_pos, window=None, causal=True,
+                          chunk_q: int = 512, chunk_kv: int = 512,
+                          softmax_scale: Optional[float] = None,
+                          p_bf16: bool = False,
+                          static_positions: bool = False,
+                          static_window: Optional[int] = None):
+    """Flash-style chunked attention in pure XLA: online softmax over KV
+    blocks via lax.scan — O(S·chunk) memory instead of O(S²).  Numerically
+    identical to ``attention_xla`` (same fp32 accumulation); property-tested
+    against it.  q: (B, S, H, D); k/v: (B, K, Hkv, D).
+
+    ``static_positions=True`` asserts q_pos/k_pos are standard aranges (q
+    aligned to the end of k), enabling *static causal chunk skipping*: each
+    q chunk scans only kv chunks intersecting its causal prefix — roughly
+    halving attention FLOPs and HBM traffic (§Perf).  ``static_window``
+    (uniform sliding window) additionally skips leading out-of-window
+    chunks."""
+    if static_positions and causal:
+        return _attention_chunked_skipping(
+            q, k, v, window, chunk_q, chunk_kv, softmax_scale, p_bf16,
+            static_window)
+    B, S, H, D = q.shape
+    K, Hkv = k.shape[1], k.shape[2]
+    G = H // Hkv
+    scale = softmax_scale if softmax_scale is not None else 1.0 / np.sqrt(D)
+    cq = min(chunk_q, S)
+    ck = min(chunk_kv, K)
+    assert S % cq == 0 and K % ck == 0, (S, K, cq, ck)
+    nq, nk = S // cq, K // ck
+    qr = q.reshape(B, nq, cq, Hkv, G, D)
+    kr = jnp.moveaxis(k.reshape(B, nk, ck, Hkv, D), 1, 0)   # (nk, B, ck, Hkv, D)
+    vr = jnp.moveaxis(v.reshape(B, nk, ck, Hkv, D), 1, 0)
+    qp = q_pos.reshape(B, nq, cq)
+    kp = jnp.moveaxis(k_pos.reshape(B, nk, ck), 1, 0)        # (nk, B, ck)
+
+    def per_q_chunk(args):
+        qc, qpc = args                     # (B, cq, Hkv, G, D), (B, cq)
+        qf = qc.astype(jnp.float32)
+
+        def kv_step(carry, inp):
+            m, l, acc = carry
+            kc, vc, kpc = inp
+            logits = jnp.einsum("bqhgd,bkhd->bhgqk", qf,
+                                kc.astype(jnp.float32)) * scale
+            diff = qpc[:, None, None, :, None] - kpc[:, None, None, None, :]
+            mask = jnp.ones(diff.shape, bool)
+            if causal:
+                mask &= diff >= 0
+            if window is not None:
+                w = jnp.asarray(window)
+                mask &= jnp.where(w > 0, diff < w, True)
+            logits = jnp.where(mask, logits, NEG_INF)
+            m_new = jnp.maximum(m, logits.max(-1))
+            p = jnp.exp(logits - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + p.sum(-1)
+            if p_bf16:
+                pv = jnp.einsum("bhgqk,bkhd->bhgqd", p.astype(jnp.bfloat16),
+                                vc.astype(jnp.bfloat16)).astype(jnp.float32)
+            else:
+                pv = jnp.einsum("bhgqk,bkhd->bhgqd", p, vc.astype(jnp.float32))
+            acc_new = acc * corr[..., None] + pv
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((B, Hkv, G, cq), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, Hkv, G, cq), jnp.float32)
+        a0 = jnp.zeros((B, Hkv, G, cq, D), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(
+            jax.checkpoint(kv_step), (m0, l0, a0), (kr, vr, kp))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        return jnp.moveaxis(out, 3, 1).reshape(B, cq, H, D).astype(q.dtype)
+
+    outs = jax.lax.map(per_q_chunk, (jnp.moveaxis(qr, 1, 0),
+                                     jnp.moveaxis(qp, 1, 0)))
+    return jnp.moveaxis(outs, 0, 1).reshape(B, S, H, D)
+
+
+def _attention_chunked_skipping(q, k, v, window, chunk_q: int, chunk_kv: int,
+                                softmax_scale, p_bf16: bool,
+                                static_window: Optional[int]):
+    """Causal chunked attention with STATIC kv-range skipping: q chunks are
+    unrolled (nq is small); each scans only kv chunks [lo, hi) where
+    hi = causal bound and lo = window bound (when the window is a static
+    uniform int).  Traced ``window`` still masks inside the diagonal blocks
+    (gemma3's mixed local:global layers)."""
+    B, S, H, D = q.shape
+    K, Hkv = k.shape[1], k.shape[2]
+    G = H // Hkv
+    scale = softmax_scale if softmax_scale is not None else 1.0 / np.sqrt(D)
+    cq = min(chunk_q, S)
+    ck = min(chunk_kv, K)
+    assert S % cq == 0 and K % ck == 0, (S, K, cq, ck)
+    nq, nk = S // cq, K // ck
+    q_offset = K - S
+    qr = q.reshape(B, nq, cq, Hkv, G, D)
+    kr = jnp.moveaxis(k.reshape(B, nk, ck, Hkv, D), 1, 0)
+    vr = jnp.moveaxis(v.reshape(B, nk, ck, Hkv, D), 1, 0)
+
+    def kv_step_for(qf, q_start):
+        def kv_step(carry, inp):
+            m, l, acc = carry
+            kc, vc, k_start = inp
+            logits = jnp.einsum("bqhgd,bkhd->bhgqk", qf,
+                                kc.astype(jnp.float32)) * scale
+            qpos = q_start + jax.lax.broadcasted_iota(jnp.int32, (cq, ck), 0)
+            kpos = k_start + jax.lax.broadcasted_iota(jnp.int32, (cq, ck), 1)
+            diff = (qpos - kpos)[None, None, None]
+            mask = diff >= 0
+            if window is not None:
+                w = jnp.asarray(window)
+                mask &= jnp.where(w > 0, diff < w, True)
+            logits = jnp.where(mask, logits, NEG_INF)
+            m_new = jnp.maximum(m, logits.max(-1))
+            p = jnp.exp(logits - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + p.sum(-1)
+            if p_bf16:
+                pv = jnp.einsum("bhgqk,bkhd->bhgqd", p.astype(jnp.bfloat16),
+                                vc.astype(jnp.bfloat16)).astype(jnp.float32)
+            else:
+                pv = jnp.einsum("bhgqk,bkhd->bhgqd", p, vc.astype(jnp.float32))
+            return (m_new, l_new, acc * corr[..., None] + pv), None
+        return kv_step
+
+    outs = []
+    for qi in range(nq):
+        q_start = qi * cq + q_offset
+        hi = min(nk, (q_start + cq - 1) // ck + 1)          # causal bound
+        lo = 0
+        if static_window and static_window > 0:
+            lo = max(0, (q_start - static_window + 1) // ck)
+        qf = qr[:, qi].astype(jnp.float32)
+        m0 = jnp.full((B, Hkv, G, cq), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, Hkv, G, cq), jnp.float32)
+        a0 = jnp.zeros((B, Hkv, G, cq, D), jnp.float32)
+        ks = jnp.asarray([i * ck for i in range(lo, hi)], jnp.int32)
+        (m, l, acc), _ = jax.lax.scan(
+            jax.checkpoint(kv_step_for(qf, q_start)), (m0, l0, a0),
+            (kr[lo:hi], vr[lo:hi], ks))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        outs.append(jnp.moveaxis(out, 3, 1).reshape(B, cq, H, D).astype(q.dtype))
+    return jnp.concatenate(outs, axis=1)
+
+
+def attention_xla(q, k, v, mask, softmax_scale: Optional[float] = None):
+    """q: (B, Q, H, D); k/v: (B, K, Hkv, D); mask: (B|1, Q, K) or (Q, K).
+    GQA: H % Hkv == 0.  Returns (B, Q, H, D)."""
+    B, Q, H, D = q.shape
+    Hkv = k.shape[2]
+    G = H // Hkv
+    scale = softmax_scale if softmax_scale is not None else 1.0 / np.sqrt(D)
+    qf = q.astype(jnp.float32).reshape(B, Q, Hkv, G, D)
+    kf = k.astype(jnp.float32)
+    logits = jnp.einsum("bqhgd,bkhd->bhgqk", qf, kf) * scale
+    while mask.ndim < 5:
+        mask = mask[None]
+    # mask shape -> broadcast to (B, Hkv, G, Q, K)
+    logits = jnp.where(mask, logits, NEG_INF)
+    p = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", p, v.astype(jnp.float32))
+    return out.reshape(B, Q, H, D).astype(q.dtype)
+
+
+@dataclasses.dataclass(frozen=True)
+class AttnParamsSpec:
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    head_dim: int
+    qkv_bias: bool
+    qk_norm: bool
+
+
+def init_attn(key, spec: AttnParamsSpec, dtype=jnp.float32):
+    d, H, Hkv, hd = spec.d_model, spec.n_heads, spec.n_kv_heads, spec.head_dim
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    s = 1.0 / np.sqrt(d)
+    p = {
+        "wq": jax.random.normal(k1, (d, H * hd), dtype) * s,
+        "wk": jax.random.normal(k2, (d, Hkv * hd), dtype) * s,
+        "wv": jax.random.normal(k3, (d, Hkv * hd), dtype) * s,
+        "wo": jax.random.normal(k4, (H * hd, d), dtype) * (1.0 / np.sqrt(H * hd)),
+    }
+    if spec.qkv_bias:
+        p["bq"] = jnp.zeros((H * hd,), dtype)
+        p["bk"] = jnp.zeros((Hkv * hd,), dtype)
+        p["bv"] = jnp.zeros((Hkv * hd,), dtype)
+    if spec.qk_norm:
+        p["q_norm"] = jnp.zeros((hd,), dtype)
+        p["k_norm"] = jnp.zeros((hd,), dtype)
+    return p
+
+
+def attn_qkv(params, x, spec: AttnParamsSpec, positions, rope_theta):
+    """Project to rotated q, k, v. x: (B, S, d)."""
+    B, S, _ = x.shape
+    H, Hkv, hd = spec.n_heads, spec.n_kv_heads, spec.head_dim
+    q = x @ params["wq"].astype(x.dtype)
+    k = x @ params["wk"].astype(x.dtype)
+    v = x @ params["wv"].astype(x.dtype)
+    if spec.qkv_bias:
+        q = q + params["bq"].astype(x.dtype)
+        k = k + params["bk"].astype(x.dtype)
+        v = v + params["bv"].astype(x.dtype)
+    q = q.reshape(B, S, H, hd)
+    k = k.reshape(B, S, Hkv, hd)
+    v = v.reshape(B, S, Hkv, hd)
+    if spec.qk_norm:
+        q = rms_norm(q, params["q_norm"])
+        k = rms_norm(k, params["k_norm"])
+    q = apply_rope(q, positions, rope_theta)
+    k = apply_rope(k, positions, rope_theta)
+    return q, k, v
+
+
+def init_mlp(key, d_model: int, d_ff: int, dtype=jnp.float32):
+    k1, k2, k3 = jax.random.split(key, 3)
+    s_in = 1.0 / np.sqrt(d_model)
+    s_out = 1.0 / np.sqrt(d_ff)
+    return {
+        "w_gate": jax.random.normal(k1, (d_model, d_ff), dtype) * s_in,
+        "w_up": jax.random.normal(k2, (d_model, d_ff), dtype) * s_in,
+        "w_down": jax.random.normal(k3, (d_ff, d_model), dtype) * s_out,
+    }
+
+
+def mlp_swiglu(params, x, hidden_cs=None):
+    g = jax.nn.silu(x @ params["w_gate"].astype(x.dtype))
+    u = x @ params["w_up"].astype(x.dtype)
+    h = g * u
+    if hidden_cs is not None:
+        h = hidden_cs(h)
+    return h @ params["w_down"].astype(x.dtype)

@@ -1,0 +1,195 @@
+"""Mixture-of-experts layer with sort-based (dropping) token dispatch.
+
+Dispatch strategy: tokens are routed top-k, sorted by expert id, and
+scattered into an (E, C, d) buffer (capacity C = ceil(T*k/E * capacity
+factor)); overflow tokens are dropped (their combine weight contributes 0,
+residual passes through).  This compiles to gather/scatter + one grouped
+einsum — O(T·d) memory instead of the O(T·E·C) one-hot dispatch tensor, which
+matters at dry-run scale (1M tokens × 16 experts).
+
+Routing: softmax router, top-k, renormalized combine weights (Mixtral
+convention), Switch-style load-balancing auxiliary loss.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class MoeSpec:
+    d_model: int
+    d_ff: int
+    n_experts: int
+    top_k: int
+    capacity_factor: float = 1.25
+    shared_expert: bool = False   # llama4-style shared expert alongside routed
+
+
+def init_moe(key, spec: MoeSpec, dtype=jnp.float32):
+    d, f, E = spec.d_model, spec.d_ff, spec.n_experts
+    ks = jax.random.split(key, 5)
+    s_in, s_out = 1.0 / np.sqrt(d), 1.0 / np.sqrt(f)
+    p = {
+        "router": jax.random.normal(ks[0], (d, E), dtype) * s_in,
+        "w_gate": jax.random.normal(ks[1], (E, d, f), dtype) * s_in,
+        "w_up": jax.random.normal(ks[2], (E, d, f), dtype) * s_in,
+        "w_down": jax.random.normal(ks[3], (E, f, d), dtype) * s_out,
+    }
+    if spec.shared_expert:
+        from .layers import init_mlp
+        p["shared"] = init_mlp(ks[4], d, f, dtype)
+    return p
+
+
+def moe_apply_local(params, x, spec: MoeSpec, dp_shards: int,
+                    token_cs=None, buf_cs=None, hid_cs=None
+                    ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Locality-aware dispatch (EXPERIMENTS.md §Perf, mixtral hillclimb):
+    tokens are logically reshaped to (dp_shards, T_local, d) and routed /
+    dispatched *within each shard* — every gather/scatter of the dispatch
+    stays device-local under GSPMD; the only cross-device traffic is the
+    (small) FSDP all-gather of the expert weights.  Capacity is per-shard
+    (standard in EP systems); same routing, per-shard drop pattern."""
+    B, S, d = x.shape
+    T = B * S
+    E, K = spec.n_experts, spec.top_k
+    assert T % dp_shards == 0
+    Tl = T // dp_shards
+    xt = x.reshape(dp_shards, Tl, d)
+    if token_cs is not None:
+        xt = token_cs(xt)
+    C = int(np.ceil(Tl * K / E * spec.capacity_factor))
+
+    def shard_dispatch(xl):
+        logits = (xl @ params["router"].astype(xl.dtype)).astype(jnp.float32)
+        probs = jax.nn.softmax(logits, axis=-1)
+        gate_vals, gate_idx = jax.lax.top_k(probs, K)
+        gate_vals = gate_vals / jnp.maximum(
+            gate_vals.sum(-1, keepdims=True), 1e-9)
+        me = probs.mean(axis=0)
+        ce = jnp.zeros((E,), jnp.float32).at[gate_idx.reshape(-1)].add(
+            1.0 / (Tl * K))
+        aux = E * jnp.sum(me * ce)
+        A = Tl * K
+        slot_expert = gate_idx.reshape(-1)
+        slot_token = jnp.repeat(jnp.arange(Tl, dtype=jnp.int32), K)
+        slot_gate = gate_vals.reshape(-1)
+        order = jnp.argsort(slot_expert)
+        se, stok, sg = slot_expert[order], slot_token[order], slot_gate[order]
+        start = jnp.searchsorted(se, jnp.arange(E, dtype=jnp.int32))
+        rank = jnp.arange(A, dtype=jnp.int32) - start[jnp.clip(se, 0, E - 1)]
+        keep = rank < C
+        buf_pos = jnp.where(keep, se * C + rank, E * C)
+        buf = jnp.zeros((E * C + 1, d), xl.dtype).at[buf_pos].set(
+            xl[stok], mode="drop")
+        return (buf[:-1].reshape(E, C, d), buf_pos, stok, sg, keep, aux)
+
+    buf, buf_pos, stok, sg, keep, aux = jax.vmap(shard_dispatch)(xt)
+    # buf: (dp, E, C, d) — experts run on every shard's local capacity.
+    # Megatron-style TP: hidden (f) sharded over model => column-parallel
+    # w_gate/w_up (local), row-parallel w_down (one AR of the output).
+    if buf_cs is not None:
+        buf = buf_cs(buf)
+    g = jax.nn.silu(jnp.einsum("secd,edf->secf", buf,
+                               params["w_gate"].astype(x.dtype)))
+    if hid_cs is not None:
+        g = hid_cs(g)
+    u = jnp.einsum("secd,edf->secf", buf, params["w_up"].astype(x.dtype))
+    if hid_cs is not None:
+        u = hid_cs(u)
+    y = jnp.einsum("secf,efd->secd", g * u, params["w_down"].astype(x.dtype))
+    if buf_cs is not None:
+        y = buf_cs(y)
+    y = y.reshape(dp_shards, E * C, d)
+
+    def shard_combine(yl, buf_pos_l, stok_l, sg_l, keep_l):
+        contrib = jnp.where(
+            keep_l[:, None],
+            yl[jnp.clip(buf_pos_l, 0, E * C - 1)]
+            * sg_l[:, None].astype(x.dtype), 0)
+        return jnp.zeros((Tl, d), x.dtype).at[stok_l].add(contrib)
+
+    out = jax.vmap(shard_combine)(y, buf_pos, stok, sg, keep)
+    if token_cs is not None:
+        out = token_cs(out)
+    out = out.reshape(B, S, d)
+    if spec.shared_expert:
+        from .layers import mlp_swiglu
+        out = out + mlp_swiglu(params["shared"], x)
+    return out, aux.mean()
+
+
+def moe_apply(params, x, spec: MoeSpec, token_cs=None, buf_cs=None,
+              y_cs=None) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x: (B, S, d) -> (out, aux_loss).
+    token_cs: sharding constraint for (T, d) token tensors.
+    buf_cs/y_cs: constraints for the (E, C, d)/(E, C, f) dispatch buffers —
+    keeping capacity token-sharded forces GSPMD to all-gather the (small,
+    FSDP-sharded) expert weights instead of all-reducing the (huge)
+    activations (§Perf, mixtral hillclimb)."""
+    B, S, d = x.shape
+    T = B * S
+    E, K = spec.n_experts, spec.top_k
+    xt = x.reshape(T, d)
+    if token_cs is not None:
+        xt = token_cs(xt)
+    logits = (xt @ params["router"].astype(x.dtype)).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)                      # (T, E)
+    gate_vals, gate_idx = jax.lax.top_k(probs, K)                # (T, K)
+    gate_vals = gate_vals / jnp.maximum(
+        gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    # ---- aux load-balancing loss (Switch): E * sum_e f_e * P_e
+    me = probs.mean(axis=0)                                      # (E,)
+    ce = jnp.zeros((E,), jnp.float32).at[gate_idx.reshape(-1)].add(
+        1.0 / (T * K))
+    aux = E * jnp.sum(me * ce)
+
+    # ---- sort-based dispatch over T*K assignment slots
+    A = T * K
+    C = int(np.ceil(A / E * spec.capacity_factor))
+    slot_expert = gate_idx.reshape(-1)                           # (A,)
+    slot_token = jnp.repeat(jnp.arange(T, dtype=jnp.int32), K)
+    slot_gate = gate_vals.reshape(-1)
+    order = jnp.argsort(slot_expert)
+    se, stok, sg = slot_expert[order], slot_token[order], slot_gate[order]
+    # rank within expert
+    start = jnp.searchsorted(se, jnp.arange(E, dtype=jnp.int32))
+    rank = jnp.arange(A, dtype=jnp.int32) - start[jnp.clip(se, 0, E - 1)]
+    keep = rank < C
+    buf_pos = jnp.where(keep, se * C + rank, E * C)              # OOB -> drop
+    # gather token features into (E*C, d)
+    buf = jnp.zeros((E * C + 1, d), x.dtype).at[buf_pos].set(
+        xt[stok], mode="drop")
+    buf = buf[:-1].reshape(E, C, d)
+    if buf_cs is not None:
+        buf = buf_cs(buf)
+
+    # ---- expert FFN (grouped einsum)
+    g = jax.nn.silu(jnp.einsum("ecd,edf->ecf", buf,
+                               params["w_gate"].astype(x.dtype)))
+    if y_cs is not None:
+        g = y_cs(g)
+    u = jnp.einsum("ecd,edf->ecf", buf, params["w_up"].astype(x.dtype))
+    if y_cs is not None:
+        u = y_cs(u)
+    y = jnp.einsum("ecf,efd->ecd", g * u, params["w_down"].astype(x.dtype))
+    if buf_cs is not None:
+        y = buf_cs(y)
+    y = y.reshape(E * C, d)
+
+    # ---- combine back (scatter-add weighted outputs per token)
+    contrib = jnp.where(keep[:, None], y[jnp.clip(buf_pos, 0, E * C - 1)]
+                        * sg[:, None].astype(x.dtype), 0)
+    out = jnp.zeros((T, d), x.dtype).at[stok].add(contrib)
+    if token_cs is not None:
+        out = token_cs(out)
+    if spec.shared_expert:
+        from .layers import mlp_swiglu
+        out = out + mlp_swiglu(params["shared"], xt)
+    return out.reshape(B, S, d), aux

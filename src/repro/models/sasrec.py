@@ -1,0 +1,122 @@
+"""SASRec (Kang & McAuley, arXiv:1808.09781) — sasrec config:
+embed_dim=50, 2 blocks, 1 head, seq_len=50, self-attentive sequential recsys.
+
+The item embedding table (1M x 50) is the hot path: lookups run through the
+DHT dedup-gather primitive (the paper's caching optimization — repeated items
+in a batch are fetched once per shard).  Scoring supports:
+  * in-batch next-item training loss (sampled softmax w/ negatives)
+  * serve: score given candidates
+  * retrieval: one user against the full 10^6-item table (sharded matmul)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .layers import attention_xla, make_attention_mask
+
+
+@dataclasses.dataclass(frozen=True)
+class SASRecConfig:
+    name: str = "sasrec"
+    n_items: int = 1_000_000
+    embed_dim: int = 50
+    n_blocks: int = 2
+    n_heads: int = 1
+    seq_len: int = 50
+    dropout: float = 0.0
+    dtype: object = jnp.float32
+
+
+def init_params(cfg: SASRecConfig, key):
+    keys = jax.random.split(key, 2 + 6 * cfg.n_blocks)
+    d = cfg.embed_dim
+    p = {
+        "item_embed": jax.random.normal(keys[0], (cfg.n_items, d), cfg.dtype) * 0.02,
+        "pos_embed": jax.random.normal(keys[1], (cfg.seq_len, d), cfg.dtype) * 0.02,
+        "blocks": [],
+    }
+    s = 1.0 / np.sqrt(d)
+    for i in range(cfg.n_blocks):
+        k = keys[2 + 6 * i: 8 + 6 * i]
+        p["blocks"].append({
+            "wq": jax.random.normal(k[0], (d, d), cfg.dtype) * s,
+            "wk": jax.random.normal(k[1], (d, d), cfg.dtype) * s,
+            "wv": jax.random.normal(k[2], (d, d), cfg.dtype) * s,
+            "wo": jax.random.normal(k[3], (d, d), cfg.dtype) * s,
+            "ffn_w1": jax.random.normal(k[4], (d, d), cfg.dtype) * s,
+            "ffn_w2": jax.random.normal(k[5], (d, d), cfg.dtype) * s,
+            "ln1": jnp.zeros((d,), cfg.dtype),
+            "ln2": jnp.zeros((d,), cfg.dtype),
+        })
+    return p
+
+
+def _ln(x, scale, eps=1e-6):
+    mu = x.mean(-1, keepdims=True)
+    var = ((x - mu) ** 2).mean(-1, keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + eps) * (1.0 + scale)
+
+
+def encode(cfg: SASRecConfig, params, item_seq):
+    """item_seq: (B, S) int32 -> user state (B, d) (last position repr)."""
+    B, S = item_seq.shape
+    d = cfg.embed_dim
+    # dedup-gather through the DHT primitive (caching optimization)
+    from ..core.dht import lookup
+    flat = item_seq.reshape(-1)
+    emb, _ = lookup(params["item_embed"], flat, dedup=True)
+    x = emb.reshape(B, S, d).astype(cfg.dtype) * np.sqrt(d)
+    x = x + params["pos_embed"][None, :S, :].astype(cfg.dtype)
+    pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    mask = make_attention_mask(pos, pos, None, causal=True)
+    pad = item_seq > 0  # item 0 = padding
+    mask = mask & pad[:, None, :]
+    for blk in params["blocks"]:
+        h = _ln(x, blk["ln1"])
+        q = (h @ blk["wq"]).reshape(B, S, cfg.n_heads, d // cfg.n_heads)
+        k = (h @ blk["wk"]).reshape(B, S, cfg.n_heads, d // cfg.n_heads)
+        v = (h @ blk["wv"]).reshape(B, S, cfg.n_heads, d // cfg.n_heads)
+        o = attention_xla(q, k, v, mask[:, None, None, :, :])
+        x = x + o.reshape(B, S, d) @ blk["wo"]
+        h2 = _ln(x, blk["ln2"])
+        x = x + jax.nn.relu(h2 @ blk["ffn_w1"]) @ blk["ffn_w2"]
+    x = jnp.where(pad[..., None], x, 0)
+    return x  # (B, S, d) position-wise user states
+
+
+def score_candidates(cfg: SASRecConfig, params, user_state, candidates):
+    """user_state: (B, d); candidates: (B, C) item ids -> scores (B, C)."""
+    from ..core.dht import lookup
+    B, C = candidates.shape
+    emb, _ = lookup(params["item_embed"], candidates.reshape(-1), dedup=True)
+    emb = emb.reshape(B, C, cfg.embed_dim).astype(user_state.dtype)
+    return jnp.einsum("bd,bcd->bc", user_state, emb)
+
+
+def retrieval_scores(cfg: SASRecConfig, params, user_state):
+    """user_state: (B, d) -> scores against the FULL item table (B, n_items).
+    Lowered as a sharded matmul over the model axis."""
+    return user_state @ params["item_embed"].astype(user_state.dtype).T
+
+
+def loss_fn(cfg: SASRecConfig, params, item_seq, pos_items, neg_items):
+    """Sequence-to-next training: BPR-style loss at every position.
+    item_seq/pos_items/neg_items: (B, S)."""
+    states = encode(cfg, params, item_seq)          # (B, S, d)
+    from ..core.dht import lookup
+    B, S = pos_items.shape
+    pe, _ = lookup(params["item_embed"], pos_items.reshape(-1), dedup=True)
+    ne, _ = lookup(params["item_embed"], neg_items.reshape(-1), dedup=True)
+    pe = pe.reshape(B, S, -1).astype(states.dtype)
+    ne = ne.reshape(B, S, -1).astype(states.dtype)
+    pos_logit = (states * pe).sum(-1)
+    neg_logit = (states * ne).sum(-1)
+    valid = (pos_items > 0).astype(jnp.float32)
+    lp = jnp.log1p(jnp.exp(-(pos_logit - neg_logit).astype(jnp.float32)))
+    loss = (lp * valid).sum() / jnp.maximum(valid.sum(), 1.0)
+    return loss, {"bpr": loss}

@@ -1,0 +1,397 @@
+"""TransformerLM covering all five assigned LM architectures.
+
+One config-driven decoder-only LM:
+  * dense or MoE FFN (top-1 llama4 w/ shared expert, top-2 mixtral)
+  * GQA, optional QKV bias / qk-norm
+  * full, sliding-window, or local:global attention patterns
+  * layers stacked for ``lax.scan`` (compile-time O(1) in depth)
+  * train forward (logits+loss), prefill (build KV cache), decode (one token)
+
+Params layout: {"embed": (V, d), "layers": {<name>: (L, ...)}, "final_norm",
+"lm_head" (or tied)}.  Per-layer heterogeneity (local vs global attention) is
+expressed as scanned per-layer scalars, keeping a single layer body.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .layers import (AttnParamsSpec, apply_rope, attention_xla,
+                     attention_xla_chunked, attn_qkv, init_attn, init_mlp,
+                     make_attention_mask, mlp_swiglu, rms_norm)
+
+# sequences >= this use the chunked (flash-style) XLA attention path
+CHUNKED_ATTN_THRESHOLD = 2048
+from .moe import MoeSpec, init_moe, moe_apply, moe_apply_local
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardCtx:
+    """Activation-sharding constraints (GSPMD hints threaded through the
+    model). dp: data-parallel axis name(s); model: tensor-parallel axis."""
+    mesh: Any
+    dp: Any
+    model: str = "model"
+
+    def cs(self, x, *spec):
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        fixed = []
+        for i, ax in enumerate(spec):
+            if ax is None:
+                fixed.append(None)
+                continue
+            import numpy as _np
+            size = (int(_np.prod([self.mesh.shape[a] for a in ax]))
+                    if isinstance(ax, tuple) else self.mesh.shape[ax])
+            fixed.append(ax if x.shape[i] % size == 0 else None)
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(self.mesh, P(*fixed)))
+
+
+def _cs(sctx, x, *spec):
+    return x if sctx is None else sctx.cs(x, *spec)
+
+
+@dataclasses.dataclass(frozen=True)
+class TransformerConfig:
+    name: str
+    vocab: int
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    head_dim: int
+    d_ff: int
+    max_seq_len: int = 131072
+    sliding_window: int = 0            # 0 = full attention
+    local_global_ratio: int = 0        # k => k local layers then 1 global
+    qk_norm: bool = False
+    qkv_bias: bool = False
+    rope_theta: float = 10000.0
+    moe_experts: int = 0
+    moe_top_k: int = 0
+    moe_d_ff: int = 0                  # expert hidden size (if != d_ff)
+    moe_shared_expert: bool = False
+    tie_embeddings: bool = False
+    dtype: Any = jnp.bfloat16
+    remat: str = "none"                # none | full | dots
+    attention_impl: str = "xla"        # xla | pallas
+    # perf knobs (EXPERIMENTS.md §Perf)
+    attn_chunk_q: int = 512
+    attn_chunk_kv: int = 512
+    attn_p_bf16: bool = False          # cast softmax P to bf16 before PV dot
+    attn_static_skip: bool = False     # static causal chunk skipping (§Perf)
+    moe_local_dispatch: bool = False   # per-dp-shard MoE dispatch (§Perf)
+    n_microbatches: int = 1            # gradient accumulation inside the step
+
+    @property
+    def static_window(self):
+        return (self.sliding_window
+                if self.sliding_window > 0 and self.local_global_ratio == 0
+                else None)
+
+    @property
+    def is_moe(self) -> bool:
+        return self.moe_experts > 0
+
+    @property
+    def attn_spec(self) -> AttnParamsSpec:
+        return AttnParamsSpec(self.d_model, self.n_heads, self.n_kv_heads,
+                              self.head_dim, self.qkv_bias, self.qk_norm)
+
+    @property
+    def moe_spec(self) -> MoeSpec:
+        return MoeSpec(self.d_model, self.moe_d_ff or self.d_ff,
+                       self.moe_experts, self.moe_top_k,
+                       shared_expert=self.moe_shared_expert)
+
+    def layer_windows(self) -> np.ndarray:
+        """Per-layer attention window (0 = full)."""
+        if self.local_global_ratio > 0:
+            r = self.local_global_ratio
+            # gemma3 pattern: r local layers, then 1 global
+            w = np.full(self.n_layers, self.sliding_window or 1024, np.int32)
+            w[r::r + 1] = 0
+            return w
+        return np.full(self.n_layers, self.sliding_window, np.int32)
+
+    def param_count(self) -> int:
+        d, f, V, L = self.d_model, self.d_ff, self.vocab, self.n_layers
+        H, Hkv, hd = self.n_heads, self.n_kv_heads, self.head_dim
+        attn = d * (H * hd) + 2 * d * (Hkv * hd) + (H * hd) * d
+        if self.is_moe:
+            fe = self.moe_d_ff or f
+            ffn = self.moe_experts * 3 * d * fe + d * self.moe_experts
+            if self.moe_shared_expert:
+                ffn += 3 * d * fe
+        else:
+            ffn = 3 * d * f
+        per_layer = attn + ffn + 2 * d
+        head = 0 if self.tie_embeddings else V * d
+        return V * d + L * per_layer + head + d
+
+    def active_param_count(self) -> int:
+        """Parameters touched per token (MoE: only routed top-k experts)."""
+        if not self.is_moe:
+            return self.param_count()
+        d, V, L = self.d_model, self.vocab, self.n_layers
+        H, Hkv, hd = self.n_heads, self.n_kv_heads, self.head_dim
+        fe = self.moe_d_ff or self.d_ff
+        attn = d * (H * hd) + 2 * d * (Hkv * hd) + (H * hd) * d
+        ffn = self.moe_top_k * 3 * d * fe + d * self.moe_experts
+        if self.moe_shared_expert:
+            ffn += 3 * d * fe
+        per_layer = attn + ffn + 2 * d
+        head = 0 if self.tie_embeddings else V * d
+        return V * d + L * per_layer + head + d
+
+
+# --------------------------------------------------------------------------
+# init
+# --------------------------------------------------------------------------
+def init_params(cfg: TransformerConfig, key, dtype=jnp.float32) -> Dict:
+    keys = jax.random.split(key, cfg.n_layers + 3)
+    embed = jax.random.normal(keys[0], (cfg.vocab, cfg.d_model), dtype) * 0.02
+
+    def layer_params(k):
+        k1, k2 = jax.random.split(k)
+        p = {"attn": init_attn(k1, cfg.attn_spec, dtype),
+             "ln1": jnp.zeros((cfg.d_model,), dtype),
+             "ln2": jnp.zeros((cfg.d_model,), dtype)}
+        if cfg.is_moe:
+            p["moe"] = init_moe(k2, cfg.moe_spec, dtype)
+        else:
+            p["mlp"] = init_mlp(k2, cfg.d_model, cfg.d_ff, dtype)
+        return p
+
+    layers = jax.vmap(layer_params)(jnp.stack(keys[1:cfg.n_layers + 1]))
+    params = {"embed": embed, "layers": layers,
+              "final_norm": jnp.zeros((cfg.d_model,), dtype)}
+    if not cfg.tie_embeddings:
+        params["lm_head"] = jax.random.normal(
+            keys[-1], (cfg.d_model, cfg.vocab), dtype) * 0.02
+    return params
+
+
+# --------------------------------------------------------------------------
+# forward (training / prefill)
+# --------------------------------------------------------------------------
+def _layer_body(cfg: TransformerConfig, sctx: Optional[ShardCtx] = None):
+    spec = cfg.attn_spec
+    dp = sctx.dp if sctx is not None else None
+    mdl = sctx.model if sctx is not None else None
+
+    def body(x, layer_p, window, positions, mask_base):
+        S = x.shape[1]
+        h = rms_norm(x, layer_p["ln1"])
+        q, k, v = attn_qkv(layer_p["attn"], h, spec, positions, cfg.rope_theta)
+        q = _cs(sctx, q, dp, None, mdl, None)
+        k = _cs(sctx, k, dp, None, mdl, None)
+        v = _cs(sctx, v, dp, None, mdl, None)
+        if cfg.attention_impl == "pallas":
+            from ..kernels.flash_attention.ops import flash_attention
+            attn_out = flash_attention(q, k, v, causal=True, window=window)
+        elif S >= CHUNKED_ATTN_THRESHOLD:
+            attn_out = attention_xla_chunked(
+                q, k, v, positions, positions, window=window, causal=True,
+                chunk_q=cfg.attn_chunk_q, chunk_kv=cfg.attn_chunk_kv,
+                p_bf16=cfg.attn_p_bf16,
+                static_positions=cfg.attn_static_skip,
+                static_window=cfg.static_window)
+        else:
+            mask = mask_base & jnp.where(
+                window > 0,
+                (positions[:, :, None] - positions[:, None, :]) < window, True)
+            attn_out = attention_xla(q, k, v, mask[:, None, None, :, :])
+        attn_flat = _cs(sctx, attn_out.reshape(x.shape[0], x.shape[1], -1),
+                        dp, None, mdl)
+        x = _cs(sctx, x + attn_flat @ layer_p["attn"]["wo"].astype(x.dtype),
+                dp, None, None)
+        h2 = rms_norm(x, layer_p["ln2"])
+        hidden_cs = (lambda h: _cs(sctx, h, dp, None, mdl)) if sctx else None
+        if cfg.is_moe:
+            if cfg.moe_local_dispatch and sctx is not None:
+                import numpy as _np
+                dpn = int(_np.prod([sctx.mesh.shape[a] for a in
+                                    (sctx.dp if isinstance(sctx.dp, tuple)
+                                     else (sctx.dp,))]))
+                ffn_out, aux = moe_apply_local(
+                    layer_p["moe"], h2, cfg.moe_spec, dpn,
+                    token_cs=lambda t: _cs(sctx, t, dp, None, None),
+                    buf_cs=lambda b: _cs(sctx, b, dp, None, None, None),
+                    hid_cs=lambda h: _cs(sctx, h, dp, None, None, mdl))
+            else:
+                ffn_out, aux = moe_apply(
+                    layer_p["moe"], h2, cfg.moe_spec,
+                    token_cs=(lambda t: _cs(sctx, t, dp, None))
+                    if sctx else None)
+        else:
+            ffn_out, aux = mlp_swiglu(layer_p["mlp"], h2,
+                                      hidden_cs=hidden_cs), jnp.float32(0)
+        return _cs(sctx, x + ffn_out, dp, None, None), aux
+
+    return body
+
+
+def forward(cfg: TransformerConfig, params, tokens,
+            sctx: Optional[ShardCtx] = None) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """tokens: (B, S) -> (logits (B, S, V), aux_loss)."""
+    B, S = tokens.shape
+    dp = sctx.dp if sctx is not None else None
+    mdl = sctx.model if sctx is not None else None
+    x = _cs(sctx, params["embed"].astype(cfg.dtype)[tokens], dp, None, None)
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    mask_base = (None if S >= CHUNKED_ATTN_THRESHOLD else
+                 make_attention_mask(positions, positions, None, causal=True))
+    windows = jnp.asarray(cfg.layer_windows())
+    body = _layer_body(cfg, sctx)
+
+    def scan_fn(x, layer):
+        layer_p, window = layer
+        fn = body
+        if cfg.remat == "full":
+            fn = jax.checkpoint(body)
+        elif cfg.remat == "dots":
+            fn = jax.checkpoint(
+                body, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+        x, aux = fn(x, layer_p, window, positions, mask_base)
+        return x, aux
+
+    x, auxs = jax.lax.scan(scan_fn, x, (params["layers"], windows))
+    x = rms_norm(x, params["final_norm"])
+    head = (params["embed"].T if cfg.tie_embeddings else params["lm_head"])
+    logits = _cs(sctx, x @ head.astype(cfg.dtype), dp, None, mdl)
+    return logits, auxs.sum()
+
+
+def loss_fn(cfg: TransformerConfig, params, tokens, labels,
+            aux_weight: float = 0.01, sctx: Optional[ShardCtx] = None):
+    logits, aux = forward(cfg, params, tokens, sctx=sctx)
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = (logz - gold).mean()
+    return nll + aux_weight * aux, {"nll": nll, "aux": aux}
+
+
+# --------------------------------------------------------------------------
+# serving: prefill + decode with per-layer KV cache
+# --------------------------------------------------------------------------
+def prefill(cfg: TransformerConfig, params, tokens,
+            sctx: Optional[ShardCtx] = None):
+    """Returns (last_logits (B, V), cache dict with k/v (L, B, S, Hkv, hd))."""
+    B, S = tokens.shape
+    dp = sctx.dp if sctx is not None else None
+    mdl = sctx.model if sctx is not None else None
+    x = _cs(sctx, params["embed"].astype(cfg.dtype)[tokens], dp, None, None)
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    mask_base = (None if S >= CHUNKED_ATTN_THRESHOLD else
+                 make_attention_mask(positions, positions, None, causal=True))
+    windows = jnp.asarray(cfg.layer_windows())
+    spec = cfg.attn_spec
+
+    def scan_fn(x, layer):
+        layer_p, window = layer
+        h = rms_norm(x, layer_p["ln1"])
+        q, k, v = attn_qkv(layer_p["attn"], h, spec, positions, cfg.rope_theta)
+        q = _cs(sctx, q, dp, None, mdl, None)
+        k = _cs(sctx, k, dp, None, mdl, None)
+        v = _cs(sctx, v, dp, None, mdl, None)
+        if S >= CHUNKED_ATTN_THRESHOLD:
+            attn_out = attention_xla_chunked(
+                q, k, v, positions, positions, window=window, causal=True,
+                chunk_q=cfg.attn_chunk_q, chunk_kv=cfg.attn_chunk_kv,
+                p_bf16=cfg.attn_p_bf16,
+                static_positions=cfg.attn_static_skip,
+                static_window=cfg.static_window)
+        else:
+            mask = mask_base & jnp.where(
+                window > 0,
+                (positions[:, :, None] - positions[:, None, :]) < window, True)
+            attn_out = attention_xla(q, k, v, mask[:, None, None, :, :])
+        attn_flat = _cs(sctx, attn_out.reshape(B, S, -1), dp, None, mdl)
+        x = _cs(sctx, x + attn_flat @ layer_p["attn"]["wo"].astype(x.dtype),
+                dp, None, None)
+        h2 = rms_norm(x, layer_p["ln2"])
+        hidden_cs = (lambda h: _cs(sctx, h, dp, None, mdl)) if sctx else None
+        if cfg.is_moe:
+            if cfg.moe_local_dispatch and sctx is not None:
+                import numpy as _np
+                dpn = int(_np.prod([sctx.mesh.shape[a] for a in
+                                    (sctx.dp if isinstance(sctx.dp, tuple)
+                                     else (sctx.dp,))]))
+                ffn_out, _ = moe_apply_local(
+                    layer_p["moe"], h2, cfg.moe_spec, dpn,
+                    token_cs=lambda t: _cs(sctx, t, dp, None, None),
+                    buf_cs=lambda b: _cs(sctx, b, dp, None, None, None),
+                    hid_cs=lambda h: _cs(sctx, h, dp, None, None, mdl))
+            else:
+                ffn_out, _ = moe_apply(
+                    layer_p["moe"], h2, cfg.moe_spec,
+                    token_cs=(lambda t: _cs(sctx, t, dp, None))
+                    if sctx else None)
+        else:
+            ffn_out = mlp_swiglu(layer_p["mlp"], h2, hidden_cs=hidden_cs)
+        return _cs(sctx, x + ffn_out, dp, None, None), (k, v)
+
+    x, (ks, vs) = jax.lax.scan(scan_fn, x, (params["layers"], windows))
+    x = rms_norm(x, params["final_norm"])
+    head = (params["embed"].T if cfg.tie_embeddings else params["lm_head"])
+    logits = _cs(sctx, x[:, -1] @ head.astype(cfg.dtype), dp, mdl)
+    cache = {"k": ks, "v": vs,
+             "length": jnp.full((B,), S, jnp.int32)}
+    return logits, cache
+
+
+def decode_step(cfg: TransformerConfig, params, cache, token,
+                sctx: Optional[ShardCtx] = None):
+    """One decode step. token: (B,) int32; cache k/v: (L, B, S, Hkv, hd).
+    The cache is a sliding window ring buffer when cfg bounds the window;
+    here S is the allocated cache length and `length` the current fill."""
+    L, B, S, Hkv, hd = cache["k"].shape
+    x = params["embed"].astype(cfg.dtype)[token][:, None, :]   # (B, 1, d)
+    pos = cache["length"][:, None]                              # (B, 1)
+    windows = jnp.asarray(cfg.layer_windows())
+    spec = cfg.attn_spec
+    slot = cache["length"][0] % S   # uniform fill assumed (batch decodes in step)
+
+    def scan_fn(x, layer):
+        layer_p, window, k_cache, v_cache = layer
+        h = rms_norm(x, layer_p["ln1"])
+        q, k_new, v_new = attn_qkv(layer_p["attn"], h, spec, pos,
+                                   cfg.rope_theta)
+        k_cache = jax.lax.dynamic_update_slice(
+            k_cache, k_new.astype(k_cache.dtype), (0, slot, 0, 0))
+        v_cache = jax.lax.dynamic_update_slice(
+            v_cache, v_new.astype(v_cache.dtype), (0, slot, 0, 0))
+        k_pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+        # ring semantics: absolute position of cache slot i
+        cur = cache["length"][0]
+        abs_pos = jnp.where(k_pos <= (cur % S), cur - (cur % S) + k_pos,
+                            cur - (cur % S) - S + k_pos)
+        valid = (abs_pos >= 0) & (abs_pos <= cur)
+        mask = valid[:, None, :]
+        mask = mask & jnp.where(window > 0,
+                                (pos[:, :, None] - abs_pos[:, None, :]) < window,
+                                True)
+        attn_out = attention_xla(q, k_cache, v_cache,
+                                 mask[:, None, None, :, :])
+        x = x + attn_out.reshape(B, 1, -1) @ layer_p["attn"]["wo"].astype(x.dtype)
+        h2 = rms_norm(x, layer_p["ln2"])
+        if cfg.is_moe:
+            ffn_out, _ = moe_apply(layer_p["moe"], h2, cfg.moe_spec)
+        else:
+            ffn_out = mlp_swiglu(layer_p["mlp"], h2)
+        return x + ffn_out, (k_cache, v_cache)
+
+    x, (ks, vs) = jax.lax.scan(
+        scan_fn, x, (params["layers"], windows, cache["k"], cache["v"]))
+    x = rms_norm(x, params["final_norm"])
+    head = (params["embed"].T if cfg.tie_embeddings else params["lm_head"])
+    logits = x[:, 0] @ head.astype(cfg.dtype)
+    new_cache = {"k": ks, "v": vs, "length": cache["length"] + 1}
+    return logits, new_cache

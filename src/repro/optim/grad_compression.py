@@ -1,0 +1,71 @@
+"""int8 gradient compression with error feedback for the DP all-reduce.
+
+At 1000+ node scale the data-parallel gradient all-reduce crosses the slow
+inter-pod links; 4x compression (int8 vs fp32/bf16) cuts that wire time
+directly.  Error feedback keeps SGD/Adam convergent: the quantization
+residual is added back into the next step's gradient (Karimireddy et al.,
+"EF-SGD").
+
+``compress``/``decompress`` are pure; ``compressed_psum`` shows the
+shard_map pattern (quantize -> psum int32 -> dequantize) used when the
+framework runs multi-host.
+"""
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def init_feedback(params) -> Any:
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def compress(g: jnp.ndarray, feedback: jnp.ndarray
+             ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Returns (q int8, scale f32 scalar, new_feedback)."""
+    corrected = g.astype(jnp.float32) + feedback
+    scale = jnp.maximum(jnp.abs(corrected).max(), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(corrected / scale), -127, 127).astype(jnp.int8)
+    new_feedback = corrected - q.astype(jnp.float32) * scale
+    return q, scale, new_feedback
+
+
+def decompress(q: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    return q.astype(jnp.float32) * scale
+
+
+def compress_tree(grads, feedback):
+    """Tree-wise compression. Returns (q_tree, scale_tree, new_feedback)."""
+    out = jax.tree.map(compress, grads, feedback)
+    q = jax.tree.map(lambda t: t[0], out, is_leaf=lambda x: isinstance(x, tuple))
+    s = jax.tree.map(lambda t: t[1], out, is_leaf=lambda x: isinstance(x, tuple))
+    fb = jax.tree.map(lambda t: t[2], out, is_leaf=lambda x: isinstance(x, tuple))
+    return q, s, fb
+
+
+def decompress_tree(q, s):
+    return jax.tree.map(decompress, q, s)
+
+
+def compressed_psum(grads, feedback, axis_name: str):
+    """Inside shard_map: per-device quantize, int32 psum, mean-dequantize.
+    Scales are psum-averaged (per-tensor max-scale is shared via a second
+    tiny all-reduce)."""
+    q, s, fb = compress_tree(grads, feedback)
+    # share a common scale (max across devices) so the int sum is coherent
+    s_max = jax.tree.map(lambda x: jax.lax.pmax(x, axis_name), s)
+    q2 = jax.tree.map(
+        lambda g, fbk, sm: jnp.clip(
+            jnp.round((g.astype(jnp.float32) + fbk) / sm), -127, 127
+        ).astype(jnp.int8), grads, feedback, s_max)
+    fb2 = jax.tree.map(
+        lambda g, fbk, qq, sm: g.astype(jnp.float32) + fbk
+        - qq.astype(jnp.float32) * sm, grads, feedback, q2, s_max)
+    summed = jax.tree.map(
+        lambda qq: jax.lax.psum(qq.astype(jnp.int32), axis_name), q2)
+    n = jax.lax.psum(1, axis_name)
+    avg = jax.tree.map(lambda sq, sm: sq.astype(jnp.float32) * sm / n,
+                       summed, s_max)
+    return avg, fb2

@@ -1,0 +1,113 @@
+"""Fault-tolerant training runner + straggler-aware work dispatch.
+
+The AMPC paper's environment (Section 5.1) runs batch jobs at low priority
+where preemption is the norm; durability comes from materializing every
+round.  This runner provides the analog for the training/serving side:
+
+  * step-level checkpoints (atomic, keep-N) with resume-from-latest;
+  * a preemption simulator (tests kill the runner mid-run and restart it);
+  * deterministic data: batch(step) is a pure function of (seed, step), so
+    restart needs no data-state, and any worker can regenerate any shard;
+  * straggler mitigation at the dispatch level: the global batch is
+    over-decomposed into work chunks; chunks owned by a worker that misses
+    its deadline are re-issued to idle workers (at-least-once execution with
+    idempotent chunk ids; the consumer dedups by chunk id).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Dict, List, Optional, Set
+
+from ..checkpoint import checkpointer as ckpt
+
+
+@dataclasses.dataclass
+class RunnerConfig:
+    ckpt_dir: str
+    ckpt_every: int = 10
+    keep: int = 3
+    max_steps: int = 100
+
+
+class TrainRunner:
+    """Drives (state, step) -> state with checkpoint/restart."""
+
+    def __init__(self, cfg: RunnerConfig, init_state_fn: Callable[[], dict],
+                 step_fn: Callable[[dict, int], dict],
+                 shardings=None):
+        self.cfg = cfg
+        self.init_state_fn = init_state_fn
+        self.step_fn = step_fn
+        self.shardings = shardings
+
+    def run(self, crash_at_step: Optional[int] = None) -> dict:
+        state = self.init_state_fn()
+        start = 0
+        if ckpt.latest_step(self.cfg.ckpt_dir) is not None:
+            state, start = ckpt.restore(self.cfg.ckpt_dir, state,
+                                        shardings=self.shardings)
+            start += 1
+        for step in range(start, self.cfg.max_steps):
+            if crash_at_step is not None and step == crash_at_step:
+                raise RuntimeError(f"simulated preemption at step {step}")
+            state = self.step_fn(state, step)
+            if (step + 1) % self.cfg.ckpt_every == 0 or \
+                    step == self.cfg.max_steps - 1:
+                ckpt.save(self.cfg.ckpt_dir, step, state, keep=self.cfg.keep)
+        return state
+
+
+# --------------------------------------------------------------------------
+# Straggler-aware chunk dispatch (host-side scheduling model)
+# --------------------------------------------------------------------------
+@dataclasses.dataclass
+class Chunk:
+    chunk_id: int
+    owner: int
+    issued_at: float
+    done: bool = False
+
+
+class StragglerDispatcher:
+    """Over-decomposed work assignment with deadline-based re-issue.
+
+    ``n_chunks`` should be a small multiple of ``n_workers`` (the paper's
+    balls-into-bins argument, Lemma 8.4 of [19], bounds per-machine load).
+    Chunks are idempotent: duplicated execution is deduped by chunk id.
+    """
+
+    def __init__(self, n_chunks: int, n_workers: int, deadline_s: float):
+        self.n_workers = n_workers
+        self.deadline = deadline_s
+        self.pending: List[int] = list(range(n_chunks))
+        self.inflight: Dict[int, Chunk] = {}
+        self.completed: Set[int] = set()
+        self.reissues = 0
+
+    def assign(self, worker: int, now: Optional[float] = None) -> Optional[int]:
+        now = time.monotonic() if now is None else now
+        # re-issue chunks whose owner blew the deadline (straggler)
+        for c in list(self.inflight.values()):
+            if not c.done and now - c.issued_at > self.deadline:
+                del self.inflight[c.chunk_id]
+                self.pending.append(c.chunk_id)
+                self.reissues += 1
+        if not self.pending:
+            return None
+        cid = self.pending.pop(0)
+        self.inflight[cid] = Chunk(cid, worker, now)
+        return cid
+
+    def complete(self, chunk_id: int) -> bool:
+        """Returns True if this completion is the first (not a dup)."""
+        first = chunk_id not in self.completed
+        self.completed.add(chunk_id)
+        self.inflight.pop(chunk_id, None)
+        return first
+
+    @property
+    def all_done(self) -> bool:
+        return not self.pending and all(
+            c.chunk_id in self.completed for c in self.inflight.values()) \
+            and len(self.completed) > 0

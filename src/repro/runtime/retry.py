@@ -1,0 +1,56 @@
+"""Resilient execution of jitted programs.
+
+Two concerns are handled here:
+
+1. **Runtime-level retry** (fault tolerance): a launch that fails with a
+   transient runtime error is retried after invalidating the executable
+   cache — the same recovery path a production runner takes after losing a
+   worker mid-step (recompile + re-execute from the last materialized
+   round).  This also works around an XLA-CPU executable re-execution bug
+   observed in this environment ("Execution supplied N buffers but compiled
+   program expected M buffers" on a warm-cache second execution), which we
+   treat exactly like a lost executable.
+
+2. **Bounded retries**: repeated failure surfaces the original error.
+"""
+from __future__ import annotations
+
+import logging
+from typing import Any, Callable
+
+import jax
+
+log = logging.getLogger(__name__)
+
+_TRANSIENT_MARKERS = (
+    "buffers but compiled program expected",   # XLA CPU re-execution bug
+    "RESOURCE_EXHAUSTED",
+    "preempted",
+)
+
+
+def is_transient(err: Exception) -> bool:
+    msg = str(err)
+    return any(marker in msg for marker in _TRANSIENT_MARKERS)
+
+
+def resilient_call(fn: Callable, *args, _retries: int = 2, **kwargs) -> Any:
+    """Call ``fn`` (usually a jitted function); on a transient runtime
+    failure, drop cached executables and retry (recompiles)."""
+    attempt = 0
+    while True:
+        try:
+            return fn(*args, **kwargs)
+        except ValueError as e:  # jaxlib surfaces XLA runtime errors as ValueError
+            if attempt >= _retries or not is_transient(e):
+                raise
+            attempt += 1
+            log.warning("transient launch failure (%s); clearing caches and "
+                        "retrying (%d/%d)", e, attempt, _retries)
+            try:
+                if hasattr(fn, "clear_cache"):
+                    fn.clear_cache()
+                else:
+                    jax.clear_caches()
+            except Exception:  # pragma: no cover - best effort
+                jax.clear_caches()

@@ -1,0 +1,67 @@
+"""Connectivity (Theorem 1) + 1-vs-2-cycle (Section 5.6)."""
+import numpy as np
+import pytest
+
+from repro.graph import generators as gen
+from repro.core import connectivity as cc, one_vs_two as ovt, oracle
+from repro.core.rounds import RoundLedger
+
+
+@pytest.mark.parametrize("name,make", [
+    ("disjoint", lambda: gen.disjoint_components([50, 80, 120], 3.0, seed=3)),
+    ("er_sparse", lambda: gen.erdos_renyi(300, 2.0, seed=5)),
+    ("two_cycles", lambda: gen.two_cycles(100)),
+    ("grid", lambda: gen.grid2d(10, 30)),
+])
+def test_cc_ampc_matches_oracle(name, make):
+    g = make()
+    want = oracle.connected_components(g)
+    got, st = cc.cc_ampc(g, seed=1)
+    assert np.array_equal(want, got)
+    assert st["num_components"] == oracle.num_components(g)
+
+
+def test_cc_mpc_baseline():
+    g = gen.disjoint_components([40, 60], 3.0, seed=9)
+    want = oracle.connected_components(g)
+    got, st = cc.cc_mpc_hash_to_min(g)
+    assert np.array_equal(want, got)
+    assert st["phases"] >= 2
+
+
+def test_cc_shuffles_constant():
+    g = gen.erdos_renyi(200, 3.0, seed=2)
+    led = RoundLedger("ampc_cc")
+    cc.cc_ampc(g, seed=0, ledger=led)
+    assert led.shuffles == 5
+
+
+@pytest.mark.parametrize("k", [100, 400])
+def test_one_vs_two_cycle(k):
+    one = gen.one_cycle(2 * k)
+    two = gen.two_cycles(k)
+    n1, _ = ovt.one_vs_two_ampc(one, p=1 / 16, seed=9)
+    n2, _ = ovt.one_vs_two_ampc(two, p=1 / 16, seed=9)
+    assert (n1, n2) == (1, 2)
+    m1, _ = ovt.one_vs_two_mpc(one, seed=9)
+    m2, _ = ovt.one_vs_two_mpc(two, seed=9)
+    assert (m1, m2) == (1, 2)
+
+
+def test_one_vs_two_round_separation():
+    """AMPC answers in O(1) shuffles; MPC needs Θ(log n) phases."""
+    g = gen.two_cycles(500)
+    la = RoundLedger("ampc")
+    ovt.one_vs_two_ampc(g, p=1 / 16, seed=1, ledger=la)
+    lm = RoundLedger("mpc")
+    _, st = ovt.one_vs_two_mpc(g, seed=1, ledger=lm)
+    assert la.shuffles == 2
+    assert lm.shuffles == 3 * st["phases"]
+    assert st["phases"] >= np.log2(500) / 2
+
+
+def test_walk_queries_scale_with_inverse_p():
+    g = gen.one_cycle(2000)
+    _, st1 = ovt.one_vs_two_ampc(g, p=1 / 8, seed=3)
+    # ~n total steps independent of p (every vertex covered ~twice)
+    assert st1["walk_steps"] == pytest.approx(2 * 2000, rel=0.3)

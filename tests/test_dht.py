@@ -1,0 +1,64 @@
+"""DHT primitive: dedup caching + lookup semantics (+hypothesis properties)."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import dht
+from repro.core.rounds import RoundLedger
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.lists(st.integers(0, 49), min_size=1, max_size=120))
+def test_dedup_keys_roundtrip(keys):
+    k = jnp.asarray(np.array(keys, np.int32))
+    uniq, inv, n_unique = dht.dedup_keys(k)
+    uniq, inv = np.asarray(uniq), np.asarray(inv)
+    assert int(n_unique) == len(set(keys))
+    # reconstruction: uniq[inv] == keys
+    assert np.array_equal(uniq[inv], np.array(keys))
+    # uniq prefix is sorted and distinct
+    pref = uniq[:int(n_unique)]
+    assert np.array_equal(pref, np.unique(np.array(keys)))
+
+
+def test_lookup_matches_take():
+    values = jnp.asarray(np.random.default_rng(0).random((64, 3)).astype(np.float32))
+    keys = jnp.asarray(np.array([3, 3, 7, 0, 63, 7, 7], np.int32))
+    out, nuniq = dht.lookup(values, keys, dedup=True)
+    ref = np.asarray(values)[np.array([3, 3, 7, 0, 63, 7, 7])]
+    assert np.allclose(np.asarray(out), ref)
+    assert int(nuniq) == 4
+
+
+def test_lookup_negative_keys_are_padding():
+    values = jnp.asarray(np.arange(10, dtype=np.float32))
+    keys = jnp.asarray(np.array([2, -1, 5], np.int32))
+    out, nuniq = dht.lookup(values, keys, dedup=True)
+    assert int(nuniq) == 2  # padding not counted
+    assert float(out[0]) == 2.0 and float(out[2]) == 5.0
+
+
+def test_sharded_dht_ledger_accounting():
+    led = RoundLedger("t")
+    values = jnp.asarray(np.zeros((32, 4), np.float32))
+    d = dht.ShardedDHT(values, ledger=led)
+    keys = jnp.asarray(np.array([1, 1, 1, 2], np.int32))
+    d.lookup(keys)
+    assert led.dht_queries == 2          # deduped
+    assert led.dedup_savings == 2        # 4 - 2
+    d.lookup(keys, dedup=False)
+    assert led.dht_queries == 2 + 4
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(2, 6), st.lists(st.integers(0, 1000), min_size=1,
+                                   max_size=60))
+def test_dedup_savings_never_negative(nvals, keys):
+    values = jnp.asarray(np.arange(1024, dtype=np.float32))
+    k = jnp.asarray(np.array(keys, np.int32) % 1024)
+    out_d, nu = dht.lookup(values, k, dedup=True)
+    out_n, nn = dht.lookup(values, k, dedup=False)
+    assert np.allclose(np.asarray(out_d), np.asarray(out_n))
+    assert int(nu) <= int(nn)

@@ -1,0 +1,64 @@
+"""Graph substrate invariants (+ hypothesis)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.graph import generators as gen
+from repro.graph.coo import UGraph
+from repro.core.ternarize import ternarize
+from repro.core import oracle
+
+
+def test_dedup_removes_self_loops_and_parallels():
+    e = np.array([[0, 1], [1, 0], [2, 2], [0, 1], [1, 2]], np.int32)
+    g = UGraph(4, e, np.array([5.0, 3.0, 1.0, 2.0, 7.0], np.float32)).dedup()
+    assert g.m == 2
+    key = set(map(tuple, np.sort(g.edges, axis=1).tolist()))
+    assert key == {(0, 1), (1, 2)}
+    # min-weight kept for the parallel pair
+    w01 = g.weights[[tuple(sorted(x)) == (0, 1) for x in g.edges.tolist()]]
+    assert float(w01[0]) == 2.0
+
+
+def test_csr_roundtrip():
+    g = gen.erdos_renyi(50, 4.0, seed=0)
+    indptr, indices, _, eid = g.csr()
+    assert indptr[-1] == 2 * g.m
+    deg = g.degrees()
+    assert np.array_equal(np.diff(indptr), deg)
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(2, 30), st.floats(1.0, 6.0), st.integers(0, 100))
+def test_ternarize_preserves_msf(n, avg_deg, seed):
+    g = gen.erdos_renyi(max(n, 4), avg_deg, seed=seed).with_random_weights(seed)
+    if g.m == 0:
+        return
+    tg = ternarize(g)
+    assert tg.g.degrees().max() <= 3
+    # MSF(tern) restricted to real edges == MSF(orig)
+    mo, _ = oracle.kruskal_msf(g)
+    mt, _ = oracle.kruskal_msf(tg.g)
+    real = np.zeros(g.m, bool)
+    sel = tg.orig_eid[mt & (tg.orig_eid >= 0)]
+    real[sel] = True
+    assert np.array_equal(mo, real)
+
+
+def test_two_cycles_structure():
+    g = gen.two_cycles(10)
+    assert g.n == 20 and g.m == 20
+    assert (g.degrees() == 2).all()
+    assert oracle.num_components(g) == 2
+
+
+def test_rmat_power_law_ish():
+    g = gen.rmat(10, 8.0, seed=0)
+    deg = g.degrees()
+    assert deg.max() > 4 * deg.mean()  # heavy tail
+
+
+def test_random_geometric_outputs():
+    g, pos, species = gen.random_geometric(50, 1.5, seed=1)
+    assert pos.shape == (50, 3) and species.shape == (50,)
+    assert g.n == 50

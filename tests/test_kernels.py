@@ -1,0 +1,112 @@
+"""Per-kernel allclose sweeps: Pallas (interpret=True) vs pure-jnp oracles."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.kernels.flash_attention.kernel import flash_attention_fwd
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.segment_matmul.ops import segment_matmul
+from repro.kernels.segment_matmul.ref import segment_matmul_ref
+from repro.kernels.embedding_bag.ops import embedding_bag
+from repro.kernels.embedding_bag.ref import embedding_bag_ref
+from repro.kernels.dht_gather.ops import dht_gather
+from repro.kernels.dht_gather.ref import dht_gather_ref
+
+
+def _tol(dtype):
+    return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 \
+        else dict(rtol=2e-5, atol=2e-5)
+
+
+# ---------------------------------------------------------------- flash attn
+@pytest.mark.parametrize("B,S,K,H,Hkv,D", [
+    (1, 128, 128, 4, 4, 32),      # MHA square
+    (2, 256, 256, 4, 2, 64),      # GQA
+    (1, 128, 384, 8, 8, 32),      # cross (decode-style, q shorter)
+    (2, 256, 256, 8, 2, 128),     # GQA wide head
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("causal,window", [(True, 0), (True, 64), (False, 0)])
+def test_flash_attention_matches_ref(B, S, K, H, Hkv, D, dtype, causal, window):
+    rng = np.random.default_rng(0)
+    q = jnp.asarray(rng.standard_normal((B, S, H, D)), dtype)
+    k = jnp.asarray(rng.standard_normal((B, K, Hkv, D)), dtype)
+    v = jnp.asarray(rng.standard_normal((B, K, Hkv, D)), dtype)
+    got = flash_attention_fwd(q, k, v, causal=causal, window=window,
+                              block_q=64, block_kv=64, interpret=True)
+    want = attention_ref(q, k, v, causal=causal, window=window)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), **_tol(dtype))
+
+
+def test_flash_attention_block_shape_independence():
+    rng = np.random.default_rng(1)
+    q = jnp.asarray(rng.standard_normal((1, 256, 2, 64)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((1, 256, 2, 64)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((1, 256, 2, 64)), jnp.float32)
+    a = flash_attention_fwd(q, k, v, block_q=64, block_kv=128, interpret=True)
+    b = flash_attention_fwd(q, k, v, block_q=128, block_kv=64, interpret=True)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-5,
+                               atol=1e-5)
+
+
+# ------------------------------------------------------------ segment_matmul
+@pytest.mark.parametrize("N,K,D,F", [(32, 3, 16, 8), (64, 8, 32, 32),
+                                     (16, 15, 64, 128)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_segment_matmul_matches_ref(N, K, D, F, dtype):
+    rng = np.random.default_rng(2)
+    x = jnp.asarray(rng.standard_normal((N, D)), dtype)
+    nbr = rng.integers(-1, N, (N, K)).astype(np.int32)
+    w = jnp.asarray(rng.standard_normal((D, F)), dtype)
+    got = segment_matmul(x, jnp.asarray(nbr), w, impl="pallas", interpret=True)
+    # the kernel accumulates in f32; compare both against the f32 oracle
+    want32 = segment_matmul_ref(x.astype(jnp.float32), jnp.asarray(nbr),
+                                w.astype(jnp.float32))
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want32, np.float32),
+                               rtol=2e-2 if dtype == jnp.bfloat16 else 1e-4,
+                               atol=2e-1 if dtype == jnp.bfloat16 else 1e-4)
+
+
+# -------------------------------------------------------------- embedding_bag
+@pytest.mark.parametrize("V,D,B,L", [(64, 16, 16, 4), (256, 32, 32, 10),
+                                     (1024, 64, 8, 50)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_embedding_bag_matches_ref(V, D, B, L, dtype):
+    rng = np.random.default_rng(3)
+    table = jnp.asarray(rng.standard_normal((V, D)), dtype)
+    ids = rng.integers(0, V, (B, L)).astype(np.int32)
+    ids[:, -1] = 0   # padding
+    got = embedding_bag(table, jnp.asarray(ids), impl="pallas", interpret=True)
+    want = embedding_bag_ref(table, jnp.asarray(ids))
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=5e-2 if dtype == jnp.bfloat16 else 1e-4,
+                               atol=5e-2 if dtype == jnp.bfloat16 else 1e-4)
+
+
+# ----------------------------------------------------------------- dht_gather
+@pytest.mark.parametrize("V,D,Q", [(64, 16, 64), (256, 32, 128)])
+def test_dht_gather_matches_take(V, D, Q):
+    rng = np.random.default_rng(4)
+    table = jnp.asarray(rng.standard_normal((V, D)).astype(np.float32))
+    keys = rng.integers(0, V, Q).astype(np.int32)
+    keys[10:20] = keys[10]        # duplicates -> cache hits
+    out, hits = dht_gather(table, jnp.asarray(keys), impl="pallas",
+                           interpret=True)
+    want = np.asarray(table)[keys]
+    np.testing.assert_allclose(np.asarray(out), want, rtol=1e-5, atol=1e-5)
+    assert int(hits) >= 9         # the duplicated run reuses the cached row
+
+
+def test_dht_gather_cache_hit_count_exact():
+    table = jnp.asarray(np.eye(8, 4, dtype=np.float32))
+    keys = jnp.asarray(np.array([3, 3, 3, 5, 5, 1, 1, 1], np.int32))
+    out, hits = dht_gather(table, keys, impl="pallas", interpret=True,
+                           presorted=False)
+    # sorted: [1,1,1,3,3,3,5,5] -> 5 adjacent duplicates
+    assert int(hits) == 5
+    ref = dht_gather_ref(table, jnp.sort(keys))
+    assert np.isfinite(np.asarray(out)).all()

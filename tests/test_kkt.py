@@ -1,0 +1,102 @@
+"""KKT filter (Algorithms 3+5): RMQ, Euler-tour rooting, path-max, F-light."""
+import collections
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.graph import generators as gen
+from repro.graph.coo import UGraph
+from repro.core import kkt_filter as kkt, oracle
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.lists(st.integers(-1000, 1000), min_size=1, max_size=200),
+       st.data())
+def test_rmq_sparse_table(xs, data):
+    a = jnp.asarray(np.array(xs, np.int32))
+    table = kkt.rmq_build(a)
+    i = data.draw(st.integers(0, len(xs) - 1))
+    j = data.draw(st.integers(i, len(xs) - 1))
+    got = int(kkt.rmq_query(table, jnp.asarray([i]), jnp.asarray([j]))[0])
+    assert got == min(xs[i:j + 1])
+
+
+def _brute_pathmax(edges, w, qu, qv):
+    adj = collections.defaultdict(list)
+    for (a, b), ww in zip(edges, w):
+        adj[a].append((b, ww)); adj[b].append((a, ww))
+    out = []
+    for s, t in zip(qu, qv):
+        seen = {int(s): -np.inf}; queue = [int(s)]
+        while queue:
+            x = queue.pop()
+            for y, ww in adj[x]:
+                if y not in seen:
+                    seen[y] = max(seen[x], ww); queue.append(y)
+        out.append(seen.get(int(t), np.inf))
+    return np.array(out)
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2, 3])
+def test_root_forest_and_path_max(seed):
+    n = 80
+    g = gen.erdos_renyi(n, 3.0, seed=seed).with_random_weights(seed)
+    fmask, _ = oracle.kruskal_msf(g)
+    fe, fw = g.edges[fmask], g.weights[fmask]
+    K = int(fmask.sum())
+    labels = oracle.connected_components(UGraph(n, fe))
+    parent, pw, depth = kkt.root_forest(
+        jnp.asarray(fe[:, 0]), jnp.asarray(fe[:, 1]), jnp.asarray(fw),
+        jnp.ones((K,), bool), n)
+    # parent pointers form a valid rooted forest
+    p = np.asarray(parent)
+    d = np.asarray(depth)
+    roots = p == np.arange(n)
+    assert (d[roots] == 0).all()
+    nonroot = ~roots
+    assert (d[nonroot] == d[p[nonroot]] + 1).all()
+
+    rng = np.random.default_rng(seed)
+    qu = rng.integers(0, n, 50).astype(np.int32)
+    qv = rng.integers(0, n, 50).astype(np.int32)
+    levels = int(np.ceil(np.log2(n))) + 1
+    maxw, same = kkt.path_max_queries(
+        parent, pw, depth, jnp.asarray(labels.astype(np.int32)),
+        jnp.asarray(qu), jnp.asarray(qv), levels)
+    ref = _brute_pathmax(fe, fw, qu, qv)
+    got, sm = np.asarray(maxw), np.asarray(same)
+    for i in range(50):
+        if qu[i] == qv[i]:
+            continue
+        assert np.isinf(ref[i]) == (not sm[i])
+        if not np.isinf(ref[i]):
+            assert abs(ref[i] - got[i]) < 1e-4
+
+
+def test_f_light_soundness():
+    """Proposition 3.8: every true MSF edge must be classified F-light."""
+    g = gen.rmat(9, 8.0, seed=1).with_random_weights(2)
+    rng = np.random.default_rng(0)
+    smask = rng.random(g.m) < 0.3
+    h = UGraph(g.n, g.edges[smask], g.weights[smask])
+    hmask, _ = oracle.kruskal_msf(h)
+    fmask = np.zeros(g.m, bool)
+    fmask[np.where(smask)[0][hmask]] = True
+    light = kkt.f_light_edges(g, fmask)
+    msf_mask, _ = oracle.kruskal_msf(g)
+    assert (light[msf_mask]).all(), "an MSF edge was classified F-heavy"
+
+
+@pytest.mark.parametrize("name,make", [
+    ("er", lambda: gen.erdos_renyi(400, 5.0, seed=3).with_random_weights(4)),
+    ("rmat", lambda: gen.rmat(10, 8.0, seed=1).with_random_weights(2)),
+])
+def test_msf_kkt_end_to_end(name, make):
+    g = make()
+    mo, _ = oracle.kruskal_msf(g)
+    mk, stats = kkt.msf_kkt(g, seed=0)
+    assert np.array_equal(mo, mk)
+    # Lemma 3.9: expected F-light count is O(n/p) = O(n log n)
+    assert stats["light_edges"] <= 6 * g.n * np.log(g.n)

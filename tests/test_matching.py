@@ -1,0 +1,73 @@
+"""Maximal matching: all four implementations compute the exact LFMM."""
+import numpy as np
+import pytest
+
+from repro.graph import generators as gen
+from repro.core import matching as mm, oracle
+from repro.core.rounds import RoundLedger
+
+FAMILIES = [
+    ("er", lambda: gen.erdos_renyi(250, 5.0, seed=6)),
+    ("rmat", lambda: gen.rmat(9, 10.0, seed=7)),
+    ("geo", lambda: gen.random_geometric(120, 1.0, seed=3)[0]),
+    ("star", lambda: gen.star(40)),
+]
+
+
+@pytest.mark.parametrize("name,make", FAMILIES)
+def test_mm_ampc_is_lfmm(name, make):
+    g = make()
+    got, st = mm.mm_ampc(g, seed=8)
+    want = oracle.greedy_mm(g, st["erank"])
+    assert np.array_equal(got, want)
+    assert oracle.is_maximal_matching(g, got)
+
+
+@pytest.mark.parametrize("name,make", FAMILIES)
+def test_mm_levels_algorithm4(name, make):
+    g = make()
+    got, st = mm.mm_ampc_levels(g, seed=8)
+    want = oracle.greedy_mm(g, st["erank"])
+    assert np.array_equal(got, want)
+    # Lemma 4.4: the level count k = ceil(log2 log2 Delta) + 1
+    delta = max(int(g.degrees().max()), 2)
+    assert st["k"] == int(np.ceil(np.log2(max(np.log2(delta), 1.000001)))) + 1
+
+
+@pytest.mark.parametrize("name,make", FAMILIES[:2])
+def test_mm_vertex_process_theorem2_part2(name, make):
+    g = make()
+    got, st = mm.mm_ampc_vertex_process(g, epsilon=0.5, seed=8)
+    want = oracle.greedy_mm(g, st["erank"])
+    assert np.array_equal(got, want)
+    # O(1/eps) launches (Lemma 4.7): generous constant
+    assert st["launches"] <= 10
+    # total space O(m + n^{1+eps})
+    assert st["queries"] <= 4 * (g.m + g.n * st["budget"]) + 1000
+
+
+@pytest.mark.parametrize("name,make", FAMILIES[:2])
+def test_mm_mpc_rootset(name, make):
+    g = make()
+    got, st = mm.mm_mpc_rootset(g, seed=8)
+    want = oracle.greedy_mm(g, st["erank"])
+    assert np.array_equal(got, want)
+
+
+def test_shuffle_counts_table3():
+    """AMPC MM uses O(1) shuffles; MPC uses 2 per phase (Table 3)."""
+    g = gen.rmat(9, 8.0, seed=1)
+    la = RoundLedger("ampc_mm")
+    mm.mm_ampc(g, seed=0, ledger=la)
+    assert la.shuffles == 2
+    lm = RoundLedger("mpc_mm")
+    _, st = mm.mm_mpc_rootset(g, seed=0, ledger=lm)
+    assert lm.shuffles == 2 * st["phases"]
+    assert lm.shuffles > la.shuffles
+
+
+def test_caching_reduces_queries():
+    """Fig 4: dedup (caching) reduces KV-store traffic."""
+    g = gen.rmat(9, 8.0, seed=2)
+    _, st = mm.mm_ampc(g, seed=0)
+    assert st["queries_dedup"] < st["queries_nodedup"]

@@ -1,0 +1,66 @@
+"""MIS: AMPC + MPC implementations compute the exact LFMIS (Section 5.3)."""
+import numpy as np
+import pytest
+
+from repro.graph import generators as gen
+from repro.core import mis, oracle
+from repro.core.rounds import RoundLedger
+
+FAMILIES = [
+    ("er", lambda: gen.erdos_renyi(300, 6.0, seed=2)),
+    ("rmat", lambda: gen.rmat(9, 8.0, seed=3)),
+    ("grid", lambda: gen.grid2d(14, 13)),
+    ("star", lambda: gen.star(50)),
+]
+
+
+@pytest.mark.parametrize("name,make", FAMILIES)
+def test_mis_ampc_is_lfmis(name, make):
+    g = make()
+    got, st = mis.mis_ampc(g, seed=4)
+    rng = np.random.default_rng(4)
+    want = oracle.greedy_mis(g, rng.permutation(g.n).astype(np.float32))
+    assert np.array_equal(got, want)
+
+
+@pytest.mark.parametrize("name,make", FAMILIES[:2])
+def test_mis_mpc_rootset(name, make):
+    g = make()
+    got, st = mis.mis_mpc_rootset(g, seed=4)
+    rng = np.random.default_rng(4)
+    want = oracle.greedy_mis(g, rng.permutation(g.n).astype(np.float32))
+    assert np.array_equal(got, want)
+
+
+def test_same_randomness_same_mis():
+    """Paper: 'By specifying the same source of randomness, both the MPC and
+    AMPC algorithms compute the same MIS.'"""
+    g = gen.rmat(9, 6.0, seed=5)
+    a, _ = mis.mis_ampc(g, seed=11)
+    b, _ = mis.mis_mpc_rootset(g, seed=11)
+    assert np.array_equal(a, b)
+
+
+def test_shuffle_counts_table3():
+    """AMPC MIS: 2 shuffles (1 heavy); MPC: 2 per phase, 8+ total."""
+    g = gen.rmat(9, 8.0, seed=1)
+    la = RoundLedger("ampc_mis")
+    mis.mis_ampc(g, seed=0, ledger=la)
+    assert la.shuffles == 2
+    lm = RoundLedger("mpc_mis")
+    _, st = mis.mis_mpc_rootset(g, seed=0, ledger=lm)
+    assert lm.shuffles == 2 * st["phases"] and lm.shuffles >= 8
+
+
+def test_caching_savings_factor():
+    """Fig 4: caching reduces KV bytes by ~2-12x on skewed graphs."""
+    g = gen.rmat(10, 12.0, seed=6)
+    _, st = mis.mis_ampc(g, seed=0)
+    assert st["cache_savings_factor"] > 1.2
+
+
+def test_fixpoint_iters_log_n():
+    """Fischer–Noever: O(log n) dependency depth w.h.p."""
+    g = gen.erdos_renyi(2000, 8.0, seed=7)
+    _, st = mis.mis_ampc(g, seed=0)
+    assert st["fixpoint_iters"] <= 6 * np.log2(g.n)

@@ -1,0 +1,88 @@
+"""MSF correctness + paper-claim validation (Theorem 1, Lemmas 3.3-3.5)."""
+import numpy as np
+import pytest
+
+from repro.graph import generators as gen
+from repro.core import msf, oracle
+from repro.core.rounds import RoundLedger
+
+FAMILIES = [
+    ("er", lambda: gen.erdos_renyi(200, 4.0, seed=1).with_random_weights(7)),
+    ("rmat", lambda: gen.rmat(9, 6.0, seed=2).with_random_weights(3)),
+    ("grid", lambda: gen.grid2d(12, 11).with_random_weights(5)),
+    ("two_cycles", lambda: gen.two_cycles(150).with_random_weights(1)),
+    ("star", lambda: gen.star(60).with_random_weights(2)),
+    ("geo", lambda: gen.random_geometric(100, 1.2, seed=4)[0].with_random_weights(9)),
+]
+
+
+@pytest.mark.parametrize("name,make", FAMILIES)
+def test_msf_ampc_matches_kruskal(name, make):
+    g = make()
+    mask_o, w_o = oracle.kruskal_msf(g)
+    mask_a, stats = msf.msf_ampc(g, epsilon=0.5, seed=0,
+                                 skip_ternarize_if_dense=False)
+    assert np.array_equal(mask_o, mask_a), f"{name}: AMPC MSF != Kruskal"
+
+
+@pytest.mark.parametrize("name,make", FAMILIES)
+def test_msf_mpc_boruvka_matches_kruskal(name, make):
+    g = make()
+    mask_o, _ = oracle.kruskal_msf(g)
+    mask_m, st = msf.msf_mpc_boruvka(g, seed=0)
+    assert np.array_equal(mask_o, mask_m)
+    assert st["phases"] >= 1
+
+
+def test_dense_path_used_for_dense_graphs():
+    g = gen.erdos_renyi(50, 20.0, seed=0).with_random_weights(1)
+    mask, stats = msf.msf_ampc(g, epsilon=0.5, seed=0)
+    assert stats["path"] == "dense"
+    mask_o, _ = oracle.kruskal_msf(g)
+    assert np.array_equal(mask_o, mask)
+
+
+def test_lemma_3_3_vertex_shrink():
+    """Contracted graph has ~n^{eps/2} fewer vertices (Lemma 3.3)."""
+    g = gen.rmat(11, 6.0, seed=5).with_random_weights(6)
+    _, stats = msf.msf_ampc(g, epsilon=0.5, seed=0,
+                            skip_ternarize_if_dense=False)
+    expected = stats["n_tern"] ** 0.25  # n^{eps/2} with eps=0.5
+    assert stats["shrink_factor"] > expected / 3.0, (
+        f"shrink {stats['shrink_factor']:.1f} << n^0.25 = {expected:.1f}")
+
+
+def test_lemma_3_4_query_complexity():
+    """Total Prim queries are O(n log n) w.h.p. (Lemma 3.4)."""
+    g = gen.rmat(11, 6.0, seed=7).with_random_weights(8)
+    _, stats = msf.msf_ampc(g, epsilon=0.5, seed=0,
+                            skip_ternarize_if_dense=False)
+    n = stats["n_tern"]
+    assert stats["queries"] <= 8 * n * np.log2(n)
+
+
+def test_round_ledger_shuffle_count():
+    """The AMPC MSF implementation uses 5 shuffles (paper Table 3)."""
+    g = gen.erdos_renyi(150, 3.0, seed=2).with_random_weights(3)
+    led = RoundLedger("ampc_msf")
+    msf.msf_ampc(g, seed=0, ledger=led, skip_ternarize_if_dense=False)
+    assert led.shuffles == 5
+    led2 = RoundLedger("mpc_msf")
+    msf.msf_mpc_boruvka(g, seed=0, ledger=led2)
+    assert led2.shuffles >= 3 * 5  # 3 shuffles/phase, many phases
+
+
+def test_degree_weighted_msf():
+    """Paper Section 5.2 weight scheme: w(u,v) ~ deg(u)+deg(v)."""
+    g = gen.rmat(9, 8.0, seed=5).with_degree_weights()
+    mask_o, w_o = oracle.kruskal_msf(g)
+    mask_a, _ = msf.msf_ampc(g, seed=0, skip_ternarize_if_dense=False)
+    assert abs(float(g.weights[mask_a].sum()) - w_o) < 1e-3
+
+
+def test_pointer_jump_converges():
+    import jax.numpy as jnp
+    parent = jnp.asarray(np.array([0, 0, 1, 2, 3, 4], np.int32))
+    roots, iters = msf.pointer_jump(parent)
+    assert np.all(np.asarray(roots) == 0)
+    assert int(iters) <= 4  # log-depth doubling

@@ -1,0 +1,95 @@
+"""Hypothesis property tests: system invariants on random graphs.
+
+Kept small (shape changes recompile the jitted fixpoints) but fully random —
+these catch structural edge cases the fixed-family tests miss (self-loop
+handling, isolated vertices, disconnected graphs, duplicate edges).
+"""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.graph.coo import UGraph
+from repro.core import matching as mm, mis, msf, oracle
+
+
+def _random_graph(draw):
+    n = draw(st.integers(5, 40))
+    m = draw(st.integers(0, 80))
+    rng = np.random.default_rng(draw(st.integers(0, 10_000)))
+    e = rng.integers(0, n, (m, 2)).astype(np.int32)
+    return UGraph(n, e).dedup()
+
+
+@settings(max_examples=12, deadline=None)
+@given(st.data())
+def test_msf_weight_equals_kruskal(data):
+    g = _random_graph(data.draw)
+    if g.m == 0:
+        return
+    g = g.with_random_weights(data.draw(st.integers(0, 100)))
+    mo, wo = oracle.kruskal_msf(g)
+    ma, _ = msf.msf_ampc(g, seed=0, skip_ternarize_if_dense=False)
+    assert np.array_equal(mo, ma)
+
+
+@settings(max_examples=12, deadline=None)
+@given(st.data())
+def test_mis_is_lfmis_and_maximal(data):
+    g = _random_graph(data.draw)
+    got, _ = mis.mis_ampc(g, seed=3)
+    rng = np.random.default_rng(3)
+    want = oracle.greedy_mis(g, rng.permutation(g.n).astype(np.float32))
+    assert np.array_equal(got, want)
+    # independence
+    for u, v in g.edges:
+        assert not (got[u] and got[v])
+
+
+@settings(max_examples=12, deadline=None)
+@given(st.data())
+def test_mm_is_lfmm_and_maximal(data):
+    g = _random_graph(data.draw)
+    if g.m == 0:
+        return
+    got, stats = mm.mm_ampc(g, seed=5)
+    want = oracle.greedy_mm(g, stats["erank"])
+    assert np.array_equal(got, want)
+    assert oracle.is_maximal_matching(g, got)
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.data())
+def test_corollary_4_1_matching_approximation(data):
+    """Corollary 4.1: random-greedy MM is a 2-approx of maximum matching
+    (we verify |MM| >= nu(G)/2 via the LP bound |MM| >= |M*|/2 using the
+    oracle's greedy as M and a brute-force max matching on tiny graphs)."""
+    n = data.draw(st.integers(4, 12))
+    m = data.draw(st.integers(2, 20))
+    rng = np.random.default_rng(data.draw(st.integers(0, 1000)))
+    e = rng.integers(0, n, (m, 2)).astype(np.int32)
+    g = UGraph(n, e).dedup()
+    if g.m == 0:
+        return
+    got, _ = mm.mm_ampc(g, seed=1)
+    # brute force maximum matching via bitmask DP over edges (tiny sizes)
+    best = 0
+    edges = g.edges.tolist()
+    import itertools
+    for k in range(min(len(edges), n // 2), 0, -1):
+        found = False
+        for combo in itertools.combinations(range(len(edges)), k):
+            used = set()
+            ok = True
+            for ei in combo:
+                u, v = edges[ei]
+                if u in used or v in used:
+                    ok = False
+                    break
+                used.add(u); used.add(v)
+            if ok:
+                found = True
+                break
+        if found:
+            best = k
+            break
+    assert int(got.sum()) * 2 >= best

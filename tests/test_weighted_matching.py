@@ -1,0 +1,60 @@
+"""Corollary 4.1 applications: weighted matching + vertex cover."""
+import itertools
+
+import numpy as np
+import pytest
+
+from repro.graph import generators as gen
+from repro.graph.coo import UGraph
+from repro.core import oracle
+from repro.core.weighted_matching import mwm_greedy_ampc, vertex_cover_2approx
+
+
+def _brute_max_weight_matching(g):
+    best = 0.0
+    edges = g.edges.tolist()
+    for k in range(min(len(edges), g.n // 2), 0, -1):
+        for combo in itertools.combinations(range(len(edges)), k):
+            used = set()
+            ok = True
+            w = 0.0
+            for ei in combo:
+                u, v = edges[ei]
+                if u in used or v in used:
+                    ok = False
+                    break
+                used.add(u); used.add(v)
+                w += float(g.weights[ei])
+            if ok:
+                best = max(best, w)
+    return best
+
+
+def test_mwm_matches_sequential_greedy():
+    g = gen.rmat(8, 6.0, seed=1).with_random_weights(3)
+    got, st = mwm_greedy_ampc(g, seed=0)
+    want = oracle.greedy_mm(g, st["erank"])
+    assert np.array_equal(got, want)
+    assert oracle.is_maximal_matching(g, got)
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_mwm_half_approximation(seed):
+    rng = np.random.default_rng(seed)
+    e = rng.integers(0, 10, (14, 2)).astype(np.int32)
+    g = UGraph(10, e).dedup()
+    if g.m == 0:
+        return
+    g = UGraph(g.n, g.edges, rng.random(g.m).astype(np.float32) + 0.1)
+    got, st = mwm_greedy_ampc(g, seed=seed)
+    opt = _brute_max_weight_matching(g)
+    assert st["weight"] * 2 + 1e-5 >= opt
+
+
+def test_vertex_cover_covers_and_2approx():
+    g = gen.erdos_renyi(60, 4.0, seed=2)
+    cover, st = vertex_cover_2approx(g, seed=0)
+    for u, v in g.edges:
+        assert cover[u] or cover[v]
+    # |cover| = 2|MM| and any VC >= |MM|  =>  2-approx by construction
+    assert st["cover_size"] % 2 == 0
