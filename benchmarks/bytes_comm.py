@@ -1,28 +1,32 @@
 """Figures 3 + 9 reproduction: bytes shuffled (MPC vs AMPC) and bytes of
-KV-store (DHT) communication; linear trend of DHT bytes vs edges."""
+KV-store (DHT) communication; linear trend of DHT bytes vs edges.  Solves go
+through the AmpcEngine, so the ledger keys are the stable result surface."""
 from __future__ import annotations
 
-from repro.core import matching as mm, mis, msf
-from repro.core.rounds import RoundLedger
+from repro.ampc import AmpcEngine
 
-from .common import GRAPHS, fmt_table
+from .common import DEFAULT_GRAPHS, GRAPHS, fmt_table
+from .registry import bench
 
 
+@bench("bytes_comm", takes_graphs=True,
+       quick_kwargs={"graph_names": ["rmat12", "er13"]},
+       summary="Fig 3/9: shuffle + DHT bytes, AMPC vs MPC")
 def run(graph_names=None):
-    names = graph_names or list(GRAPHS)
+    names = graph_names or list(DEFAULT_GRAPHS)
+    eng = AmpcEngine(seed=0)
     rows = []
     trend = []
     for gname in names:
         g = GRAPHS[gname]()
-        la, lm = RoundLedger("ampc_mis"), RoundLedger("mpc_mis")
-        mis.mis_ampc(g, seed=0, ledger=la)
-        mis.mis_mpc_rootset(g, seed=0, ledger=lm)
+        la = eng.solve(g, "mis").ledger
+        lm = eng.solve(g, "mis-mpc").ledger
         rows.append([gname, g.n, g.m,
-                     f"{la.bytes_shuffled/1e6:.1f}",
-                     f"{la.dht_bytes/1e6:.1f}",
-                     f"{lm.bytes_shuffled/1e6:.1f}",
-                     f"{lm.bytes_shuffled/max(la.bytes_shuffled,1):.1f}x"])
-        trend.append((g.m, la.dht_bytes))
+                     f"{la['bytes_shuffled']/1e6:.1f}",
+                     f"{la['dht_bytes']/1e6:.1f}",
+                     f"{lm['bytes_shuffled']/1e6:.1f}",
+                     f"{lm['bytes_shuffled']/max(la['bytes_shuffled'],1):.1f}x"])
+        trend.append((g.m, la["dht_bytes"]))
     out = fmt_table(["graph", "n", "m", "AMPC shuffle MB", "AMPC DHT MB",
                      "MPC shuffle MB", "MPC/AMPC shuffled"], rows)
     print(out)

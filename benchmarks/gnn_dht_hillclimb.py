@@ -30,6 +30,8 @@ import textwrap
 
 import numpy as np
 
+from .registry import bench
+
 MEASURE_B = textwrap.dedent("""
     import os
     os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
@@ -65,6 +67,8 @@ MEASURE_B = textwrap.dedent("""
 """)
 
 
+@bench("gnn_dht_hillclimb",
+       summary="§Perf hillclimb: GNN message passing as a DHT query wave")
 def run():
     env = dict(os.environ)
     env["PYTHONPATH"] = "src"

@@ -3,18 +3,23 @@ KV-store traffic (the multithreading optimization has no TPU analogue —
 batched gathers are already parallel; see DESIGN.md §2)."""
 from __future__ import annotations
 
-from repro.core import matching as mm, mis
+from repro.ampc import AmpcEngine
 
-from .common import GRAPHS, fmt_table
+from .common import DEFAULT_GRAPHS, GRAPHS, fmt_table
+from .registry import bench
 
 
+@bench("mis_caching", takes_graphs=True,
+       quick_kwargs={"graph_names": ["rmat12", "er13"]},
+       summary="Fig 4: caching (dedup) query savings for MIS/MM")
 def run(graph_names=None):
-    names = graph_names or list(GRAPHS)
+    names = graph_names or list(DEFAULT_GRAPHS)
+    eng = AmpcEngine(seed=0)
     rows = []
     for gname in names:
         g = GRAPHS[gname]()
-        _, st = mis.mis_ampc(g, seed=0)
-        _, stm = mm.mm_ampc(g, seed=0)
+        st = eng.solve(g, "mis").stats
+        stm = eng.solve(g, "matching").stats
         rows.append([gname,
                      st["queries_nodedup"], st["queries_dedup"],
                      f"{st['cache_savings_factor']:.2f}x",

@@ -1,22 +1,25 @@
 """Lemma 3.3/3.4 validation at scale: Prim query complexity O(n log n) and
 vertex shrink factor n^{eps/2} across graph sizes; KKT filter effectiveness
-(Lemma 3.9)."""
+(Lemma 3.9).  Solves dispatched through the AmpcEngine."""
 from __future__ import annotations
 
 import numpy as np
 
-from repro.core import msf, kkt_filter as kkt
+from repro.ampc import AmpcEngine
 from repro.graph import generators as gen
 
 from .common import fmt_table
+from .registry import bench
 
 
+@bench("msf_queries", quick_kwargs={"log2_sizes": (10, 12)},
+       summary="Lemma 3.3/3.4: Prim queries + shrink factor; KKT filter")
 def run(log2_sizes=(10, 12, 14)):
+    eng = AmpcEngine(epsilon=0.5, seed=0)
     rows = []
     for lg in log2_sizes:
         g = gen.rmat(lg, 8.0, seed=lg).with_random_weights(lg)
-        _, st = msf.msf_ampc(g, epsilon=0.5, seed=0,
-                             skip_ternarize_if_dense=False)
+        st = eng.solve(g, "msf", skip_ternarize_if_dense=False).stats
         n = st["n_tern"]
         bound = n * np.log2(n)
         rows.append([f"2^{lg}", g.n, g.m, st["queries"],
@@ -29,7 +32,7 @@ def run(log2_sizes=(10, 12, 14)):
 
     # KKT filter: fraction of edges surviving the F-light test
     g = gen.rmat(13, 12.0, seed=5).with_random_weights(7)
-    _, st = kkt.msf_kkt(g, seed=0)
+    st = eng.solve(g, "msf-kkt").stats
     frac = st["filtered_away"] / g.m
     print(f"\nKKT filter: {st['filtered_away']}/{g.m} edges filtered "
           f"({100*frac:.0f}%); light bound O(n/p)={st['light_edges']} vs "

@@ -1,0 +1,58 @@
+"""Benchmark registry — mirrors ``repro.ampc.registry`` for the harness.
+
+Each benchmark module decorates its ``run`` with ``@bench(...)``; the
+harness (``benchmarks.run``) dispatches by registry lookup instead of
+``__import__`` + ad-hoc kwargs, and applies the shared ``--graphs`` /
+``--quick`` config path uniformly.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, Optional
+
+
+@dataclasses.dataclass(frozen=True)
+class BenchSpec:
+    name: str
+    fn: Callable                      # run(**kwargs) -> result dict
+    takes_graphs: bool = False        # accepts graph_names=[...]
+    quick_kwargs: dict = dataclasses.field(default_factory=dict)
+    summary: str = ""
+
+
+REGISTRY: Dict[str, BenchSpec] = {}
+
+
+def bench(name: str, *, takes_graphs: bool = False,
+          quick_kwargs: Optional[dict] = None, summary: str = ""):
+    """Register a benchmark entry point."""
+
+    def deco(fn):
+        if name in REGISTRY:
+            raise ValueError(f"duplicate benchmark registration: {name}")
+        REGISTRY[name] = BenchSpec(name=name, fn=fn,
+                                   takes_graphs=takes_graphs,
+                                   quick_kwargs=dict(quick_kwargs or {}),
+                                   summary=summary)
+        return fn
+
+    return deco
+
+
+def load_all():
+    """Import every benchmark module so decorators run; returns REGISTRY."""
+    from . import (table3_rounds, bytes_comm, mis_caching, runtimes,  # noqa
+                   msf_queries, gnn_dht_hillclimb, roofline)          # noqa
+    return REGISTRY
+
+
+def get(name: str) -> BenchSpec:
+    load_all()
+    if name not in REGISTRY:
+        raise KeyError(f"unknown benchmark {name!r}; known: {sorted(REGISTRY)}")
+    return REGISTRY[name]
+
+
+def names():
+    # insertion (curated) order: headline tables first, roofline last
+    return list(load_all())

@@ -10,6 +10,7 @@ import json
 import os
 
 from .common import fmt_table
+from .registry import bench
 
 MITIGATIONS = {
     ("lm", "memory"): "bigger attn chunks / bf16 accum / flash bwd kernel",
@@ -39,6 +40,7 @@ def load(paths=("results/dryrun.jsonl", "results/dryrun_fix.jsonl")):
     return list(recs.values())
 
 
+@bench("roofline", summary="Roofline table from dry-run artifacts")
 def run(paths=("results/dryrun.jsonl", "results/dryrun_fix.jsonl"),
         mesh_filter=None):
     recs = load(paths)

@@ -1,7 +1,14 @@
 """Benchmark harness entry point:  PYTHONPATH=src python -m benchmarks.run
 
-Runs one benchmark per paper table/figure and the roofline report.
-Use --quick for the reduced graph set, --only <name> for a single bench.
+Runs one benchmark per paper table/figure and the roofline report, all
+dispatched through ``benchmarks.registry`` (each module self-registers with
+``@bench``).  Shared config path:
+
+  --only <name>     run a single benchmark
+  --quick           registry-declared reduced settings per benchmark
+  --graphs a,b,c    graph subset (names from benchmarks.common.GRAPHS) for
+                    every benchmark that takes graphs; overrides --quick's
+                    default subset
 """
 from __future__ import annotations
 
@@ -9,31 +16,36 @@ import argparse
 import sys
 import time
 
-BENCHES = ["table3_rounds", "bytes_comm", "mis_caching", "runtimes",
-           "msf_queries", "gnn_dht_hillclimb", "roofline"]
+from . import registry
+from .common import GRAPHS
 
 
-def main():
+def main(argv=None):
+    names = registry.names()
     ap = argparse.ArgumentParser()
-    ap.add_argument("--only", choices=BENCHES)
+    ap.add_argument("--only", choices=names)
     ap.add_argument("--quick", action="store_true")
-    args = ap.parse_args()
-    selected = [args.only] if args.only else BENCHES
+    ap.add_argument("--graphs",
+                    help="comma-separated subset of "
+                         f"{sorted(GRAPHS)} for graph benchmarks")
+    args = ap.parse_args(argv)
+    graph_names = None
+    if args.graphs:
+        graph_names = [g.strip() for g in args.graphs.split(",") if g.strip()]
+        unknown = [g for g in graph_names if g not in GRAPHS]
+        if unknown:
+            ap.error(f"unknown graphs {unknown}; known: {sorted(GRAPHS)}")
+    selected = [args.only] if args.only else names
     results = {}
     for name in selected:
+        spec = registry.get(name)
         print(f"\n{'='*72}\n== {name}\n{'='*72}", flush=True)
-        mod = __import__(f"benchmarks.{name}", fromlist=["run"])
         t0 = time.time()
-        kw = {}
-        if args.quick and name in ("table3_rounds", "bytes_comm",
-                                   "mis_caching", "runtimes"):
-            kw = {"graph_names": ["rmat12", "er13"]}
-        if args.quick and name == "runtimes":
-            kw["cycles"] = {"2x2e3": 2000}
-        if args.quick and name == "msf_queries":
-            kw = {"log2_sizes": (10, 12)}
+        kw = dict(spec.quick_kwargs) if args.quick else {}
+        if spec.takes_graphs and graph_names is not None:
+            kw["graph_names"] = graph_names
         try:
-            results[name] = mod.run(**kw)
+            results[name] = spec.fn(**kw)
             print(f"[{name} done in {time.time()-t0:.1f}s]")
         except Exception as e:  # noqa: BLE001
             print(f"[{name} FAILED: {e}]")

@@ -1,29 +1,34 @@
 """Figures 5-8 + Table 4 analog: wall-clock AMPC vs MPC on the benchmark
 suite (single-host CPU execution of the same jitted programs; the paper's
 absolute times are datacenter-specific, the *ratios* and round counts are
-the reproducible claims)."""
+the reproducible claims).  Every solve goes through one AmpcEngine."""
 from __future__ import annotations
 
-from repro.core import matching as mm, mis, msf, one_vs_two as ovt
-from repro.core.rounds import RoundLedger
+from repro.ampc import AmpcEngine
 
-from .common import CYCLES, GRAPHS, fmt_table, timed
+from .common import CYCLES, DEFAULT_GRAPHS, GRAPHS, fmt_table
+from .registry import bench
 from repro.graph import generators as gen
 
 
+@bench("runtimes", takes_graphs=True,
+       quick_kwargs={"graph_names": ["rmat12", "er13"],
+                     "cycles": {"2x2e3": 2000}},
+       summary="Fig 5-8: wall-clock AMPC vs MPC speedups")
 def run(graph_names=None, cycles=None):
-    names = graph_names or list(GRAPHS)
+    names = graph_names or list(DEFAULT_GRAPHS)
+    eng = AmpcEngine(seed=0)
     rows = []
     for gname in names:
         g = GRAPHS[gname]()
         gw = g.with_random_weights(0)
-        (_, t_amis) = timed(lambda: mis.mis_ampc(g, seed=0))
-        (_, t_mmis) = timed(lambda: mis.mis_mpc_rootset(g, seed=0))
-        (_, t_amm) = timed(lambda: mm.mm_ampc(g, seed=0))
-        (_, t_mmm) = timed(lambda: mm.mm_mpc_rootset(g, seed=0))
-        (_, t_amsf) = timed(lambda: msf.msf_ampc(
-            gw, seed=0, skip_ternarize_if_dense=False))
-        (_, t_mmsf) = timed(lambda: msf.msf_mpc_boruvka(gw, seed=0))
+        t_amis = eng.solve(g, "mis").wall_time_s
+        t_mmis = eng.solve(g, "mis-mpc").wall_time_s
+        t_amm = eng.solve(g, "matching").wall_time_s
+        t_mmm = eng.solve(g, "matching-mpc").wall_time_s
+        t_amsf = eng.solve(gw, "msf",
+                           skip_ternarize_if_dense=False).wall_time_s
+        t_mmsf = eng.solve(gw, "msf-mpc").wall_time_s
         rows.append([gname,
                      f"{t_amis:.2f}/{t_mmis:.2f} ({t_mmis/t_amis:.1f}x)",
                      f"{t_amm:.2f}/{t_mmm:.2f} ({t_mmm/t_amm:.1f}x)",
@@ -35,10 +40,11 @@ def run(graph_names=None, cycles=None):
     crows = []
     for cname, k in (cycles or CYCLES).items():
         g2 = gen.two_cycles(k)
-        (nc_a, t_a) = timed(lambda: ovt.one_vs_two_ampc(g2, p=1 / 64, seed=0))
-        (nc_m, t_m) = timed(lambda: ovt.one_vs_two_mpc(g2, seed=0))
-        assert nc_a[0] == 2 and nc_m[0] == 2
-        crows.append([cname, f"{t_a:.2f}", f"{t_m:.2f}", f"{t_m/t_a:.1f}x"])
+        ra = eng.solve(g2, "one-vs-two", p=1 / 64)
+        rm = eng.solve(g2, "one-vs-two-mpc")
+        assert ra.output == 2 and rm.output == 2
+        crows.append([cname, f"{ra.wall_time_s:.2f}", f"{rm.wall_time_s:.2f}",
+                      f"{rm.wall_time_s/ra.wall_time_s:.1f}x"])
     cout = fmt_table(["cycles", "AMPC s", "MPC s", "speedup"], crows)
     print("\n" + cout)
     print("\npaper: MIS 2.31-3.18x, MM 1.16-1.72x, MSF 2.6-7.19x, "

@@ -1,37 +1,42 @@
 """Table 3 reproduction: shuffles (costly rounds) used by AMPC vs MPC
-implementations of MIS / MaximalMatching / MSF (+ connectivity)."""
+implementations of MIS / MaximalMatching / MSF (+ connectivity), dispatched
+through the AmpcEngine problem registry."""
 from __future__ import annotations
 
-from repro.core import matching as mm, mis, msf, connectivity as cc
-from repro.core.rounds import RoundLedger
+from repro.ampc import AmpcEngine, get_problem
 
-from .common import GRAPHS, fmt_table
+from .common import DEFAULT_GRAPHS, GRAPHS, fmt_table
+from .registry import bench
+
+# (row label, registry problem name, solve opts)
+ALGS = [
+    ("AMPC MIS", "mis", {}),
+    ("AMPC MM", "matching", {}),
+    ("AMPC MSF", "msf", {"skip_ternarize_if_dense": False}),
+    ("AMPC CC", "connectivity", {}),
+    ("MPC MIS", "mis-mpc", {}),
+    ("MPC MM", "matching-mpc", {}),
+    ("MPC MSF", "msf-mpc", {}),
+    ("MPC CC", "connectivity-mpc", {}),
+]
 
 
+@bench("table3_rounds", takes_graphs=True,
+       quick_kwargs={"graph_names": ["rmat12", "er13"]},
+       summary="Table 3: materialized shuffles, AMPC vs MPC")
 def run(graph_names=None):
-    rows = []
-    names = graph_names or list(GRAPHS)
-    algs = [
-        ("AMPC MIS", lambda g, led: mis.mis_ampc(g, seed=0, ledger=led)),
-        ("AMPC MM", lambda g, led: mm.mm_ampc(g, seed=0, ledger=led)),
-        ("AMPC MSF", lambda g, led: msf.msf_ampc(
-            g.with_random_weights(0), seed=0, ledger=led,
-            skip_ternarize_if_dense=False)),
-        ("AMPC CC", lambda g, led: cc.cc_ampc(g, seed=0, ledger=led)),
-        ("MPC MIS", lambda g, led: mis.mis_mpc_rootset(g, seed=0, ledger=led)),
-        ("MPC MM", lambda g, led: mm.mm_mpc_rootset(g, seed=0, ledger=led)),
-        ("MPC MSF", lambda g, led: msf.msf_mpc_boruvka(
-            g.with_random_weights(0), seed=0, ledger=led)),
-        ("MPC CC", lambda g, led: cc.cc_mpc_hash_to_min(g, ledger=led)),
-    ]
+    names = graph_names or list(DEFAULT_GRAPHS)
+    eng = AmpcEngine(seed=0)
     table = {}
     for gname in names:
         g = GRAPHS[gname]()
-        for aname, fn in algs:
-            led = RoundLedger(aname)
-            fn(g, led)
-            table.setdefault(aname, {})[gname] = led.shuffles
-    rows = [[aname] + [table[aname][g] for g in names] for aname, _ in algs]
+        gw = g.with_random_weights(0)
+        for aname, prob, opts in ALGS:
+            gin = gw if get_problem(prob).needs_weights else g
+            res = eng.solve(gin, prob, **opts)
+            table.setdefault(aname, {})[gname] = res.ledger["shuffles"]
+    rows = [[aname] + [table[aname][g] for g in names]
+            for aname, _, _ in ALGS]
     out = fmt_table(["Algorithm (shuffles)"] + names, rows)
     print(out)
     return {"table": table, "markdown": out}

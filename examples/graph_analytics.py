@@ -5,16 +5,15 @@ single-linkage hierarchical clustering").
 
 Builds a noisy point cloud with 4 planted clusters, computes the MSF of the
 mutual-distance graph in constant adaptive rounds, cuts the heaviest edges,
-and recovers the clusters with forest connectivity.
+and recovers the clusters with forest connectivity — both solves through
+one ``AmpcEngine``.
 
   PYTHONPATH=src python examples/graph_analytics.py
 """
 import numpy as np
 
+from repro.ampc import AmpcEngine
 from repro.graph.coo import UGraph
-from repro.core import msf
-from repro.core.msf import boruvka_inround
-import jax.numpy as jnp
 
 
 def make_clusters(k=4, per=150, spread=0.06, seed=0):
@@ -41,11 +40,14 @@ def main():
     pts, truth = make_clusters()
     g = knn_graph(pts)
     print(f"kNN graph: n={g.n} m={g.m}")
+    eng = AmpcEngine(seed=0)
 
     # 1) MSF in constant adaptive rounds
-    mask, stats = msf.msf_ampc(g, seed=0, skip_ternarize_if_dense=False)
+    res = eng.solve(g, "msf", skip_ternarize_if_dense=False)
+    mask = res.output
     print(f"MSF edges: {mask.sum()} (queries/vertex "
-          f"{stats['avg_queries_per_vertex']:.1f})")
+          f"{res.stats['avg_queries_per_vertex']:.1f}, "
+          f"{res.shuffles} shuffles)")
 
     # 2) "simple sorting step": cut the k-1 + noise heaviest MSF edges
     fe = np.where(mask)[0]
@@ -55,13 +57,8 @@ def main():
     cut = mask & keep
 
     # 3) forest connectivity on the remaining forest
-    fe2 = g.edges[cut]
-    K = int(cut.sum())
-    _, labels, _ = boruvka_inround(
-        jnp.asarray(fe2[:, 0]), jnp.asarray(fe2[:, 1]),
-        jnp.asarray(np.arange(K, dtype=np.float32)),
-        jnp.arange(K, dtype=jnp.int32), jnp.ones((K,), bool), g.n, K)
-    labels = np.asarray(labels)
+    forest = UGraph(g.n, g.edges[cut])
+    labels = eng.solve(forest, "connectivity").output
 
     # score: purity of recovered clusters vs planted truth
     uniq = np.unique(labels)

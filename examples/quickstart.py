@@ -1,59 +1,61 @@
-"""Quickstart: the paper's four algorithms on a social-network-like graph,
-with the AMPC-vs-MPC round/byte accounting (Table 3 in miniature).
+"""Quickstart: the paper's algorithms on a social-network-like graph through
+the unified ``AmpcEngine`` session API (Table 3 in miniature).
+
+One engine serves every problem; each ``solve`` returns an ``AmpcResult``
+whose ``ledger`` carries the AMPC-vs-MPC round/byte accounting that used to
+require hand-threading a ``RoundLedger`` per call.
 
   PYTHONPATH=src python examples/quickstart.py
 """
 import numpy as np
 
+from repro.ampc import AmpcEngine
+from repro.core import oracle
 from repro.graph import generators as gen
-from repro.core import connectivity as cc, matching as mm, mis, msf, \
-    one_vs_two as ovt, oracle
-from repro.core.rounds import RoundLedger
 
 
 def main():
     g = gen.rmat(12, 8.0, seed=0)
     print(f"graph: n={g.n} m={g.m} (RMAT, power-law)")
+    eng = AmpcEngine(dht_backend="local", epsilon=0.5, seed=0)
 
     # --- MIS
-    la, lm = RoundLedger("ampc"), RoundLedger("mpc")
-    s_a, st = mis.mis_ampc(g, seed=0, ledger=la)
-    s_m, _ = mis.mis_mpc_rootset(g, seed=0, ledger=lm)
-    assert np.array_equal(s_a, s_m), "same randomness => same MIS"
-    print(f"\nMIS: |I|={s_a.sum()}  AMPC shuffles={la.shuffles} "
-          f"(cache saved {st['cache_savings_factor']:.1f}x queries)  "
-          f"MPC shuffles={lm.shuffles}")
+    ra = eng.solve(g, "mis")
+    rm = eng.solve(g, "mis-mpc")
+    assert np.array_equal(ra.output, rm.output), "same randomness => same MIS"
+    print(f"\nMIS: |I|={ra.output.sum()}  AMPC shuffles={ra.shuffles} "
+          f"(cache saved {ra.stats['cache_savings_factor']:.1f}x queries)  "
+          f"MPC shuffles={rm.shuffles}")
 
     # --- Maximal matching
-    la, lm = RoundLedger("ampc"), RoundLedger("mpc")
-    m_a, st = mm.mm_ampc(g, seed=0, ledger=la)
-    print(f"MM : |M|={m_a.sum()}  AMPC shuffles={la.shuffles}  "
-          f"maximal={oracle.is_maximal_matching(g, m_a)}")
+    rmm = eng.solve(g, "matching")
+    print(f"MM : |M|={rmm.output.sum()}  AMPC shuffles={rmm.shuffles}  "
+          f"maximal={oracle.is_maximal_matching(g, rmm.output)}")
 
     # --- MSF (degree weights, Section 5.2)
     gw = g.with_degree_weights()
-    la, lm = RoundLedger("ampc"), RoundLedger("mpc")
-    f_a, st = msf.msf_ampc(gw, seed=0, ledger=la,
-                           skip_ternarize_if_dense=False)
-    f_m, stm = msf.msf_mpc_boruvka(gw, seed=0, ledger=lm)
-    print(f"MSF: weight={gw.weights[f_a].sum():.0f}  AMPC shuffles="
-          f"{la.shuffles} (queries/vertex={st['avg_queries_per_vertex']:.1f})"
-          f"  MPC shuffles={lm.shuffles} ({stm['phases']} Borůvka phases)")
+    rf = eng.solve(gw, "msf", skip_ternarize_if_dense=False)
+    rfm = eng.solve(gw, "msf-mpc")
+    print(f"MSF: weight={gw.weights[rf.output].sum():.0f}  AMPC shuffles="
+          f"{rf.shuffles} "
+          f"(queries/vertex={rf.stats['avg_queries_per_vertex']:.1f})"
+          f"  MPC shuffles={rfm.shuffles} "
+          f"({rfm.stats['phases']} Borůvka phases)")
 
     # --- 1-vs-2 cycle
     for name, cyc, expect in [("one", gen.one_cycle(20000), 1),
                               ("two", gen.two_cycles(10000), 2)]:
-        la = RoundLedger("ampc")
-        n_a, st = ovt.one_vs_two_ampc(cyc, p=1 / 64, seed=0, ledger=la)
-        n_m, stm = ovt.one_vs_two_mpc(cyc, seed=0)
-        print(f"1v2c({name}): AMPC says {n_a} in {la.shuffles} shuffles; "
-              f"MPC says {n_m} in {3 * stm['phases']} shuffles")
-        assert n_a == n_m == expect
+        ra = eng.solve(cyc, "one-vs-two", p=1 / 64)
+        rm = eng.solve(cyc, "one-vs-two-mpc")
+        print(f"1v2c({name}): AMPC says {ra.output} in {ra.shuffles} "
+              f"shuffles; MPC says {rm.output} in "
+              f"{3 * rm.stats['phases']} shuffles")
+        assert ra.output == rm.output == expect
 
     # --- connectivity
     parts = gen.disjoint_components([3000, 2000, 1000], 4.0, seed=1)
-    labels, st = cc.cc_ampc(parts, seed=0)
-    print(f"CC : {st['num_components']} components (expected 3)")
+    rc = eng.solve(parts, "connectivity")
+    print(f"CC : {rc.stats['num_components']} components (expected 3)")
 
 
 if __name__ == "__main__":

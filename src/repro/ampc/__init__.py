@@ -1,0 +1,20 @@
+"""Unified AMPC session API.
+
+One entry point for every algorithm the paper studies::
+
+    from repro.ampc import AmpcEngine
+    res = AmpcEngine(dht_backend="routed").solve(g, "msf")
+
+See README.md in this directory for the engine / registry / backend design
+and the deprecation path for the old per-module functions.
+"""
+from .backends import DhtBackend, LocalDht, RoutedDht, resolve_backend
+from .engine import AmpcEngine, AmpcResult, SolveContext
+from .registry import ProblemSpec, get as get_problem, names as problem_names, \
+    problem, specs as problem_specs
+
+__all__ = [
+    "AmpcEngine", "AmpcResult", "SolveContext",
+    "DhtBackend", "LocalDht", "RoutedDht", "resolve_backend",
+    "ProblemSpec", "problem", "get_problem", "problem_names", "problem_specs",
+]

@@ -1,0 +1,108 @@
+"""Pluggable DHT backends for the AMPC engine.
+
+The paper's AMPC model has exactly one shared primitive: an immutable
+distributed hash table written by the previous round and queried adaptively
+inside the current one.  ``core.dht`` provides two execution schedules for
+that primitive — a plain device gather (``lookup``) and an explicit
+``shard_map`` all_to_all router (``routed_lookup``).  This module promotes
+both behind one ``DhtBackend`` protocol so the engine (and any solver) can
+issue lookups without knowing which schedule runs underneath, and so ledger
+accounting (queries, bytes, dedup savings, waves, overflows) is identical on
+both paths.
+
+Backends are stateless between solves: ``snapshot(values)`` binds a value
+array + ledger into a ``core.dht.ShardedDHT`` and every query goes through
+``ShardedDHT.lookup`` — the single accounting choke point.
+"""
+from __future__ import annotations
+
+from typing import Optional, Protocol, runtime_checkable
+
+import jax
+import jax.numpy as jnp
+
+from ..core.dht import ShardedDHT
+
+
+@runtime_checkable
+class DhtBackend(Protocol):
+    """One immutable-snapshot KV store; the only AMPC communication primitive."""
+
+    name: str
+
+    def snapshot(self, values, ledger=None,
+                 value_bytes: Optional[int] = None) -> ShardedDHT:
+        """Write ``values`` (row i = value of key i) into the DHT."""
+        ...
+
+    def lookup(self, values, keys, *, ledger=None, dedup: bool = True,
+               value_bytes: Optional[int] = None):
+        """One-shot snapshot + query batch (convenience for single reads)."""
+        ...
+
+
+class _BackendBase:
+    def lookup(self, values, keys, *, ledger=None, dedup: bool = True,
+               value_bytes: Optional[int] = None):
+        return self.snapshot(values, ledger=ledger,
+                             value_bytes=value_bytes).lookup(keys, dedup=dedup)
+
+
+class LocalDht(_BackendBase):
+    """Gather-based DHT: ``jnp.take`` which XLA partitions under pjit."""
+
+    name = "local"
+
+    def snapshot(self, values, ledger=None,
+                 value_bytes: Optional[int] = None) -> ShardedDHT:
+        return ShardedDHT(jnp.asarray(values), ledger=ledger,
+                          value_bytes=value_bytes)
+
+    def __repr__(self):
+        return "LocalDht()"
+
+
+class RoutedDht(_BackendBase):
+    """Explicit router DHT: dedup -> bucket by owner -> all_to_all -> answer.
+
+    This is the collective schedule an RDMA KV store replaces (paper
+    Section 5).  ``mesh`` defaults to a 1-D mesh over every visible device;
+    pass a production mesh + ``axis_name`` to shard over one of its axes.
+    """
+
+    name = "routed"
+
+    def __init__(self, mesh=None, axis_name: Optional[str] = None,
+                 capacity: Optional[int] = None):
+        if mesh is None:
+            devices = jax.devices()
+            mesh = jax.make_mesh((len(devices),), ("dht",))
+            axis_name = "dht"
+        self.mesh = mesh
+        self.axis_name = axis_name or mesh.axis_names[0]
+        self.capacity = capacity
+
+    def snapshot(self, values, ledger=None,
+                 value_bytes: Optional[int] = None) -> ShardedDHT:
+        return ShardedDHT(jnp.asarray(values), ledger=ledger,
+                          value_bytes=value_bytes, mesh=self.mesh,
+                          axis_name=self.axis_name, capacity=self.capacity)
+
+    def __repr__(self):
+        return (f"RoutedDht(axis={self.axis_name!r}, "
+                f"shards={self.mesh.shape[self.axis_name]})")
+
+
+def resolve_backend(spec, mesh=None) -> DhtBackend:
+    """Map ``"local" | "routed" | DhtBackend-instance`` to a backend object."""
+    if isinstance(spec, str):
+        if spec == "local":
+            return LocalDht()
+        if spec == "routed":
+            return RoutedDht(mesh=mesh)
+        raise ValueError(
+            f"unknown dht_backend {spec!r}; expected 'local', 'routed', or a "
+            "DhtBackend instance")
+    if isinstance(spec, DhtBackend):
+        return spec
+    raise TypeError(f"dht_backend must be str or DhtBackend, got {type(spec)}")

@@ -1,0 +1,20 @@
+"""Once-per-symbol deprecation warnings for the pre-engine call surface."""
+from __future__ import annotations
+
+import warnings
+
+_warned = set()
+
+
+def warn_once(old: str, new: str):
+    """Emit one DeprecationWarning per process for ``old``.
+
+    The legacy module-level functions keep working (they are thin shims over
+    :mod:`repro.ampc.solvers`), but new code should go through
+    ``AmpcEngine.solve`` — see src/repro/ampc/README.md.
+    """
+    if old in _warned:
+        return
+    _warned.add(old)
+    warnings.warn(f"{old} is deprecated; use {new} (see src/repro/ampc/"
+                  "README.md)", DeprecationWarning, stacklevel=3)

@@ -1,0 +1,135 @@
+"""``AmpcEngine`` — one entry point for every AMPC algorithm in the repo.
+
+    from repro.ampc import AmpcEngine
+    eng = AmpcEngine(dht_backend="local", epsilon=0.5, seed=0)
+    res = eng.solve(graph, "mis")
+    res.output                  # bool (n,) membership mask
+    res.ledger["shuffles"]      # Table-3 materialized round count
+    res.stats                   # algorithm-specific stats, stable key names
+
+The engine owns the three things every pre-engine call site threaded by
+hand: the ``RoundLedger`` (created per solve, summarized on the result),
+the DHT backend (local gather vs routed all_to_all — pluggable, identical
+accounting), and the seed/epsilon defaults.  Problems are resolved through
+:mod:`repro.ampc.registry`, so a new algorithm becomes engine-callable by
+decorating its adapter with ``@problem(...)``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Dict, Optional
+
+from ..core.rounds import RoundLedger
+from . import registry
+from .backends import DhtBackend, resolve_backend
+
+
+@dataclasses.dataclass
+class AmpcResult:
+    """Uniform result of ``AmpcEngine.solve``.
+
+    ``output`` follows the problem's declared kind: ``vertex_mask`` (bool
+    (n,)), ``edge_mask`` (bool (m,)), ``labels`` (int (n,)), or ``count``
+    (int).  ``ledger`` is the ``RoundLedger.summary()`` dict —
+    ``ledger["shuffles"]`` is the paper's Table-3 round count.
+    """
+
+    problem: str
+    model: str                      # "ampc" | "mpc"
+    backend: str                    # DHT backend name used for the solve
+    output: Any
+    stats: Dict[str, Any]
+    ledger: Dict[str, Any]
+    wall_time_s: float
+    raw_ledger: RoundLedger = dataclasses.field(repr=False, default=None)
+
+    @property
+    def shuffles(self) -> int:
+        return self.ledger["shuffles"]
+
+    def __repr__(self):
+        return (f"AmpcResult(problem={self.problem!r}, model={self.model!r}, "
+                f"backend={self.backend!r}, shuffles={self.shuffles}, "
+                f"dht_queries={self.ledger['dht_queries']}, "
+                f"wall_time_s={self.wall_time_s:.3f})")
+
+
+@dataclasses.dataclass
+class SolveContext:
+    """Cross-cutting state handed to every registered solver."""
+
+    ledger: RoundLedger
+    dht: DhtBackend
+    seed: int
+    epsilon: float
+    mesh: Any = None
+
+
+class AmpcEngine:
+    """Session object for AMPC graph solves.
+
+    Parameters
+    ----------
+    mesh:         optional jax mesh handed to the routed backend (a 1-D mesh
+                  over all devices is built when omitted).
+    dht_backend:  ``"local"`` | ``"routed"`` | a ``DhtBackend`` instance.
+    epsilon:      the paper's space exponent (per-machine space n^ε).
+    seed:         default randomness for rank permutations / sampling.
+    """
+
+    def __init__(self, mesh=None, dht_backend="local", epsilon: float = 0.5,
+                 seed: int = 0):
+        self.mesh = mesh
+        self.dht = resolve_backend(dht_backend, mesh=mesh)
+        self.epsilon = float(epsilon)
+        self.seed = int(seed)
+
+    # ------------------------------------------------------------------
+    def solve(self, graph, problem: str, *, seed: Optional[int] = None,
+              epsilon: Optional[float] = None, **opts) -> AmpcResult:
+        """Run ``problem`` on ``graph`` and return an ``AmpcResult``.
+
+        ``**opts`` are forwarded to the registered solver (e.g.
+        ``skip_ternarize_if_dense=False`` for msf, ``p=1/64`` for
+        one-vs-two).  ``seed``/``epsilon`` override the engine defaults for
+        this solve only.
+        """
+        spec = registry.get(problem)
+        if spec.needs_weights and getattr(graph, "weights", None) is None:
+            raise ValueError(
+                f"problem {spec.name!r} needs edge weights; call "
+                "g.with_random_weights()/g.with_degree_weights() first")
+        if spec.needs_cycles and not (graph.degrees() == 2).all():
+            raise ValueError(
+                f"problem {spec.name!r} needs a disjoint union of cycles "
+                "(every vertex must have degree 2)")
+        ledger = RoundLedger(f"{spec.model}_{spec.name}")
+        ctx = SolveContext(
+            ledger=ledger, dht=self.dht,
+            seed=self.seed if seed is None else int(seed),
+            epsilon=self.epsilon if epsilon is None else float(epsilon),
+            mesh=self.mesh)
+        t0 = time.perf_counter()
+        output, stats = spec.fn(ctx, graph, **opts)
+        wall = time.perf_counter() - t0
+        return AmpcResult(problem=spec.name, model=spec.model,
+                          backend=self.dht.name, output=output, stats=stats,
+                          ledger=ledger.summary(), wall_time_s=wall,
+                          raw_ledger=ledger)
+
+    # ------------------------------------------------------------------
+    def problems(self, model: Optional[str] = None):
+        """Names of every solvable problem (optionally one model only)."""
+        return registry.names(model)
+
+    def baseline_for(self, problem: str) -> Optional[str]:
+        """Name of the MPC baseline registered for an AMPC problem."""
+        for spec in registry.specs("mpc"):
+            if spec.baseline_of == registry.get(problem).name:
+                return spec.name
+        return None
+
+    def __repr__(self):
+        return (f"AmpcEngine(dht_backend={self.dht.name!r}, "
+                f"epsilon={self.epsilon}, seed={self.seed})")

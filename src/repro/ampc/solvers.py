@@ -1,0 +1,718 @@
+"""Normalized AMPC / MPC solver drivers — the engine's algorithm layer.
+
+Every driver that used to live at module level in ``core.mis`` /
+``core.matching`` / ``core.msf`` / ``core.connectivity`` /
+``core.weighted_matching`` / ``core.one_vs_two`` now lives here with a
+*normalized* surface:
+
+  * the jitted numerical primitives (fixpoints, truncated Prim, Borůvka,
+    pointer jumping, walks) stay in their ``core`` modules;
+  * each driver accepts the same cross-cutting keywords (``seed``,
+    ``ledger``, and — for AMPC solvers with array outputs — an optional
+    ``dht`` backend for the final CollectOutputs snapshot read);
+  * each driver is registered with :mod:`repro.ampc.registry` so
+    ``AmpcEngine.solve(graph, "<problem>")`` reaches it uniformly.
+
+The old ``core`` module functions remain as thin deprecated shims that
+delegate here, so pre-engine call sites keep working unchanged.
+
+The ``dht`` parameter realizes the paper's last step of every AMPC round:
+machines read their outputs back from the immutable DHT snapshot.  With the
+``local`` backend that read is a device gather; with the ``routed`` backend
+it is a real dedup + all_to_all exchange.  Both report through the same
+ledger path, so ``AmpcResult.ledger`` is backend-independent except for the
+collect-read traffic itself.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..graph.coo import UGraph
+from ..core.rounds import RoundLedger, nbytes_of
+from ..core.ternarize import ternarize
+from ..core.mis import _mis_fixpoint, IN, OUT, UNKNOWN
+from ..core.matching import _mm_fixpoint, _mm_wave, BIGF
+from ..core.msf import (truncated_prim, pointer_jump, contract_edges,
+                        boruvka_inround, _mpc_boruvka_phase)
+from ..core.connectivity import _canonicalize, _h2m_phase
+from ..core.one_vs_two import cycle_adjacency, _walk_and_count, \
+    _local_contraction_phase
+from . import registry
+from .registry import problem
+
+
+def _collect(dht, ledger, values, keys=None, dedup: bool = False):
+    """CollectOutputs: read an output snapshot back through the DHT backend.
+
+    ``dht=None`` (legacy call sites) degrades to a plain device_get.  With a
+    backend, the read is a genuine lookup (local gather or routed
+    all_to_all) whose queries/bytes land in the ledger.
+    """
+    if dht is None:
+        return np.asarray(jax.device_get(values))
+    if keys is None:
+        keys = jnp.arange(values.shape[0], dtype=jnp.int32)
+    out = dht.lookup(values, keys, ledger=ledger, dedup=dedup)
+    return np.asarray(jax.device_get(out))
+
+
+# ==========================================================================
+# MIS (paper Proposition 4.2 / Section 5.3)
+# ==========================================================================
+def mis_ampc(g: UGraph, seed: int = 0,
+             ledger: Optional[RoundLedger] = None,
+             caching: bool = True, dht=None) -> Tuple[np.ndarray, dict]:
+    """Returns (in_mis bool(n,), stats)."""
+    ledger = ledger if ledger is not None else RoundLedger("ampc_mis")
+    n = g.n
+    rng = np.random.default_rng(seed)
+    rank = rng.permutation(n).astype(np.float32)
+
+    # shuffle 1: build the rank-directed graph, write to the DHT (Fig 1 step 1-2)
+    with ledger.shuffle("DirectEdges+WriteKV", nbytes_of(g.edges) * 2):
+        s, r, _, _ = g.symmetric()
+        senders = jnp.asarray(s); receivers = jnp.asarray(r)
+        jrank = jnp.asarray(rank)
+
+    # shuffle 2: IsInMIS search — adaptive queries against the snapshot
+    with ledger.shuffle("IsInMIS", n * 4):
+        status_dev, iters, q0, q1 = _mis_fixpoint(senders, receivers, jrank, n)
+        status = _collect(dht, ledger, status_dev)
+        it = int(jax.device_get(iters))
+        qn = int(jax.device_get(q0)); qd = int(jax.device_get(q1))
+    queries = qd if caching else qn
+    row_bytes = 8  # nodeid + status
+    ledger.record_queries(queries, queries * row_bytes, waves=it,
+                          deduped_away=(qn - qd) if caching else 0)
+    assert not (status == UNKNOWN).any()
+    return status == IN, {"fixpoint_iters": it, "queries_nodedup": qn,
+                          "queries_dedup": qd,
+                          "cache_savings_factor": qn / max(qd, 1)}
+
+
+def mis_mpc_rootset(g: UGraph, seed: int = 0,
+                    ledger: Optional[RoundLedger] = None,
+                    max_phases: int = 500) -> Tuple[np.ndarray, dict]:
+    ledger = ledger if ledger is not None else RoundLedger("mpc_mis")
+    n = g.n
+    rng = np.random.default_rng(seed)
+    rank = jnp.asarray(rng.permutation(n).astype(np.float32))
+    s, r, _, _ = g.symmetric()
+    senders = jnp.asarray(s); receivers = jnp.asarray(r)
+
+    @jax.jit
+    def phase(status):
+        s_unk = status[senders] == UNKNOWN
+        lower = rank[receivers] < rank[senders]
+        blocked = s_unk & lower & (status[receivers] != OUT)
+        has_block = jax.ops.segment_max(blocked.astype(jnp.int32), senders,
+                                        num_segments=n)
+        nbr_in = s_unk & (status[receivers] == IN)
+        has_in = jax.ops.segment_max(nbr_in.astype(jnp.int32), senders,
+                                     num_segments=n)
+        unk = status == UNKNOWN
+        status = jnp.where(unk & (has_in > 0), OUT, status)
+        status = jnp.where(unk & (has_in <= 0) & (has_block <= 0), IN, status)
+        return status, (status == UNKNOWN).sum()
+
+    status = jnp.zeros((n,), jnp.int32)
+    phases = 0
+    nb = nbytes_of(g.edges) * 2
+    remaining = n
+    while remaining > 0 and phases < max_phases:
+        # paper Fig 2: 2 shuffles per phase (mark-to-remove join, removal join)
+        with ledger.shuffle(f"rootset_mark_{phases}", nb):
+            status, rem = phase(status)
+        with ledger.shuffle(f"rootset_remove_{phases}", nb):
+            remaining = int(jax.device_get(rem))
+        phases += 1
+    status = np.asarray(jax.device_get(status))
+    return status == IN, {"phases": phases}
+
+
+# ==========================================================================
+# Maximal matching (paper Section 4, Theorem 2)
+# ==========================================================================
+def mm_ampc(g: UGraph, seed: int = 0,
+            ledger: Optional[RoundLedger] = None,
+            caching: bool = True, erank: Optional[np.ndarray] = None,
+            dht=None) -> Tuple[np.ndarray, dict]:
+    """Greedy maximal matching over the rank permutation ``erank``.
+
+    ``erank`` is the rank-injection point (Corollary 4.1): when omitted it
+    is a fresh random permutation drawn from ``seed``; weighted matching
+    passes decreasing-weight ranks instead.  Returns (in_mm bool(m,), stats).
+    """
+    ledger = ledger if ledger is not None else RoundLedger("ampc_mm")
+    n, m = g.n, g.m
+    if erank is None:
+        rng = np.random.default_rng(seed)
+        erank = rng.permutation(m).astype(np.float32)
+    else:
+        erank = np.asarray(erank, np.float32)
+        assert erank.shape == (m,), "erank must be one rank per edge"
+
+    with ledger.shuffle("SortEdges+WriteKV", nbytes_of(g.edges) * 2):
+        u = jnp.asarray(g.edges[:, 0]); v = jnp.asarray(g.edges[:, 1])
+        jrank = jnp.asarray(erank)
+
+    with ledger.shuffle("IsInMM", m):
+        estatus_dev, iters, q0, q1 = _mm_fixpoint(
+            u, v, jrank, n, jnp.zeros((m,), jnp.int32))
+        estatus = _collect(dht, ledger, estatus_dev)
+        it = int(jax.device_get(iters))
+        qn = int(jax.device_get(q0)); qd = int(jax.device_get(q1))
+    queries = qd if caching else qn
+    ledger.record_queries(queries, queries * 12, waves=it,
+                          deduped_away=(qn - qd) if caching else 0)
+    return estatus == IN, {"fixpoint_iters": it, "queries_nodedup": qn,
+                           "queries_dedup": qd, "erank": erank}
+
+
+def mm_ampc_levels(g: UGraph, seed: int = 0,
+                   ledger: Optional[RoundLedger] = None) -> Tuple[np.ndarray, dict]:
+    """Algorithm 4: O(log log Δ) geometric sampling levels."""
+    ledger = ledger if ledger is not None else RoundLedger("ampc_mm_levels")
+    n, m = g.n, g.m
+    rng = np.random.default_rng(seed)
+    erank01 = rng.permutation(m).astype(np.float64) / max(m, 1)  # π(e) in [0,1)
+    delta = int(g.degrees().max()) if m else 1
+    k = int(np.ceil(np.log2(max(np.log2(max(delta, 2)), 1.000001)))) + 1
+    u = jnp.asarray(g.edges[:, 0]); v = jnp.asarray(g.edges[:, 1])
+    jrank = jnp.asarray(erank01.astype(np.float32))
+    estatus = jnp.zeros((m,), jnp.int32)
+    level_stats = []
+    ten_log_n = 10 * np.log(max(n, 2))
+    for i in range(1, k + 1):
+        # current degree of the residual graph
+        unk = estatus == UNKNOWN
+        deg = np.zeros(n, np.int64)
+        eun = np.asarray(jax.device_get(unk))
+        np.add.at(deg, g.edges[eun, 0], 1)
+        np.add.at(deg, g.edges[eun, 1], 1)
+        cur_delta = int(deg.max()) if eun.any() else 0
+        if cur_delta == 0:
+            break
+        if cur_delta > ten_log_n:
+            thresh = float(delta) ** (-(0.5 ** i))
+        else:
+            thresh = 1.1  # H_i = G_i
+        in_h = jnp.asarray(erank01 <= thresh) & unk
+        with ledger.shuffle(f"level_{i}_greedyMM", nbytes_of(g.edges)):
+            # resolve the sampled subgraph completely (one AMPC launch)
+            st, iters, q0, q1 = _mm_fixpoint(
+                u, v, jnp.where(in_h, jrank, BIGF), n,
+                jnp.where(in_h, jnp.int32(UNKNOWN), jnp.int32(OUT)))
+            # edges of H_i resolved; commit IN edges, kill touched vertices
+            new_in = (st == IN) & in_h
+            estatus = jnp.where(new_in, IN, estatus)
+            matched = jnp.zeros((n,), jnp.int32)
+            matched = matched.at[jnp.where(estatus == IN, u, n)].set(1, mode="drop")
+            matched = matched.at[jnp.where(estatus == IN, v, n)].set(1, mode="drop")
+            dead = (estatus == UNKNOWN) & ((matched[u] == 1) | (matched[v] == 1))
+            estatus = jnp.where(dead, OUT, estatus)
+            # H_i \ M_i edges whose endpoints survive go back to G_{i+1}
+        level_stats.append({"level": i, "delta": cur_delta,
+                            "threshold": thresh,
+                            "iters": int(jax.device_get(iters))})
+    st = np.asarray(jax.device_get(estatus))
+    return st == IN, {"levels": level_stats, "k": k,
+                      "erank": erank01.astype(np.float32)}
+
+
+def mm_ampc_vertex_process(g: UGraph, epsilon: float = 0.5, seed: int = 0,
+                           ledger: Optional[RoundLedger] = None,
+                           ) -> Tuple[np.ndarray, dict]:
+    """Theorem 2 part 2: vertex-started truncated query process.
+
+    Each launch gives every vertex a fresh budget of n^ε queries; decisions on
+    an edge are applied only while at least one endpoint still has budget, so
+    resolution is delayed — never altered — and the output is the exact LFMM.
+    """
+    ledger = ledger if ledger is not None else RoundLedger("ampc_mm_vertex")
+    n, m = g.n, g.m
+    rng = np.random.default_rng(seed)
+    erank = rng.permutation(m).astype(np.float32)
+    u = jnp.asarray(g.edges[:, 0]); v = jnp.asarray(g.edges[:, 1])
+    jrank = jnp.asarray(erank)
+    budget = max(4, int(np.ceil(n ** epsilon)))
+
+    @functools.partial(jax.jit, static_argnames=())
+    def launch(estatus):
+        qcount0 = jnp.zeros((n,), jnp.int32)
+
+        def cond(s):
+            estatus, qcount, it, q = s
+            unk = estatus == UNKNOWN
+            active = (qcount[u] < budget) | (qcount[v] < budget)
+            return jnp.any(unk & active) & (it < 4 * budget)
+
+        def body(s):
+            estatus, qcount, it, q = s
+            active = (qcount[u] < budget) | (qcount[v] < budget)
+            new, _ = _mm_wave(estatus, u, v, jrank, n, active_edge=active)
+            unk = estatus == UNKNOWN
+            # each unresolved active edge costs one query at each live endpoint
+            cost = jnp.zeros((n,), jnp.int32)
+            live = unk & active
+            cost = cost.at[jnp.where(live, u, n)].add(1, mode="drop")
+            cost = cost.at[jnp.where(live, v, n)].add(1, mode="drop")
+            return new, qcount + cost, it + 1, q + live.sum()
+
+        return jax.lax.while_loop(cond, body,
+                                  (estatus, qcount0, jnp.int32(0), jnp.int32(0)))
+
+    estatus = jnp.zeros((m,), jnp.int32)
+    launches, total_q = 0, 0
+    while bool(jax.device_get(jnp.any(estatus == UNKNOWN))) and launches < 64:
+        with ledger.shuffle(f"vertex_process_{launches}", m):
+            estatus, qcount, iters, q = launch(estatus)
+            total_q += int(jax.device_get(q))
+        launches += 1
+    ledger.record_queries(total_q, total_q * 12, waves=launches)
+    st = np.asarray(jax.device_get(estatus))
+    return st == IN, {"launches": launches, "budget": budget,
+                      "queries": total_q, "erank": erank}
+
+
+def mm_mpc_rootset(g: UGraph, seed: int = 0,
+                   ledger: Optional[RoundLedger] = None,
+                   max_phases: int = 500) -> Tuple[np.ndarray, dict]:
+    ledger = ledger if ledger is not None else RoundLedger("mpc_mm")
+    n, m = g.n, g.m
+    rng = np.random.default_rng(seed)
+    erank = rng.permutation(m).astype(np.float32)
+    u = jnp.asarray(g.edges[:, 0]); v = jnp.asarray(g.edges[:, 1])
+    jrank = jnp.asarray(erank)
+
+    @jax.jit
+    def phase(estatus):
+        new, _ = _mm_wave(estatus, u, v, jrank, n)
+        return new, (new == UNKNOWN).sum()
+
+    estatus = jnp.zeros((m,), jnp.int32)
+    phases, remaining = 0, m
+    nb = nbytes_of(g.edges)
+    while remaining > 0 and phases < max_phases:
+        with ledger.shuffle(f"rootset_mark_{phases}", nb):
+            estatus, rem = phase(estatus)
+        with ledger.shuffle(f"rootset_remove_{phases}", nb):
+            remaining = int(jax.device_get(rem))
+        phases += 1
+    st = np.asarray(jax.device_get(estatus))
+    return st == IN, {"phases": phases, "erank": erank}
+
+
+# ==========================================================================
+# Corollary 4.1 applications of the MM black box
+# ==========================================================================
+def mwm_greedy_ampc(g: UGraph, seed: int = 0,
+                    ledger: Optional[RoundLedger] = None,
+                    dht=None) -> Tuple[np.ndarray, dict]:
+    """1/2-approx maximum weight matching: greedy by decreasing weight
+    (ties broken by a random permutation), via the AMPC MM fixpoint with
+    weight-derived ranks injected through ``mm_ampc(erank=...)``.
+    Returns (in_matching bool(m,), stats)."""
+    assert g.weights is not None
+    rng = np.random.default_rng(seed)
+    tie = rng.permutation(g.m).astype(np.float64) / max(g.m, 1)
+    # rank: ascending = processed first => sort by decreasing weight
+    order = np.argsort(np.lexsort((tie, -g.weights.astype(np.float64))))
+    erank = order.astype(np.float32)
+    ledger = ledger if ledger is not None else RoundLedger("ampc_mwm")
+    in_mm, st = mm_ampc(g, seed=seed, ledger=ledger, erank=erank, dht=dht)
+    w = float(g.weights[in_mm].sum())
+    return in_mm, {"weight": w, **st}
+
+
+def vertex_cover_2approx(g: UGraph, seed: int = 0,
+                         ledger: Optional[RoundLedger] = None,
+                         dht=None) -> Tuple[np.ndarray, dict]:
+    """2-approx minimum vertex cover = endpoints of a maximal matching."""
+    in_mm, stats = mm_ampc(g, seed=seed, ledger=ledger, dht=dht)
+    cover = np.zeros(g.n, bool)
+    cover[g.edges[in_mm, 0]] = True
+    cover[g.edges[in_mm, 1]] = True
+    return cover, {"cover_size": int(cover.sum()), **stats}
+
+
+# ==========================================================================
+# MSF (paper Section 3, Algorithm 2)
+# ==========================================================================
+def msf_ampc(g: UGraph, epsilon: float = 0.5, seed: int = 0,
+             ledger: Optional[RoundLedger] = None,
+             skip_ternarize_if_dense: bool = True,
+             dht=None) -> Tuple[np.ndarray, dict]:
+    """Compute the MSF mask over g.edges.  Returns (mask, stats)."""
+    ledger = ledger if ledger is not None else RoundLedger("ampc_msf")
+    assert g.weights is not None
+    n, m = g.n, g.m
+    rng = np.random.default_rng(seed)
+
+    dense = skip_ternarize_if_dense and m >= n ** (1.0 + epsilon / 2.0)
+    if dense:
+        # Proposition 3.1 path: run the dense routine directly.
+        u = jnp.asarray(g.edges[:, 0]); v = jnp.asarray(g.edges[:, 1])
+        w = jnp.asarray(g.weights); eid = jnp.arange(m, dtype=jnp.int32)
+        valid = jnp.ones((m,), bool)
+        with ledger.shuffle("DenseMSF", nbytes_of(g.edges, g.weights)):
+            mask_dev, _, phases = boruvka_inround(u, v, w, eid, valid, n, m)
+            mask = _collect(dht, ledger, mask_dev.astype(jnp.int32)) \
+                .astype(bool)
+        return mask, {"phases": int(jax.device_get(phases)), "path": "dense"}
+
+    # --- shuffle 1: SortGraph (ternarize + build sorted adjacency, write DHT)
+    with ledger.shuffle("SortGraph", nbytes_of(g.edges, g.weights)):
+        tg = ternarize(g)
+        nbr, nbw, nbe = tg.g.padded_adj(3)
+        nt = tg.g.n
+        rank = rng.permutation(nt).astype(np.float32)
+        budget = max(2, int(np.ceil(nt ** (epsilon / 2.0))))
+    ledger.record_queries(0, 0, waves=0)
+
+    # --- shuffle 2: PrimSearch (adaptive queries against the DHT snapshot)
+    jn_nbr, jn_nbw, jn_nbe = jnp.asarray(nbr), jnp.asarray(nbw), jnp.asarray(nbe)
+    jn_rank = jnp.asarray(rank)
+    with ledger.shuffle("PrimSearch", 0):
+        out_eids, hooks, cases, queries = truncated_prim(
+            jn_nbr, jn_nbw, jn_nbe, jn_rank, budget)
+        total_q = int(jax.device_get(queries.sum()))
+    row_bytes = 3 * (4 + 4 + 4)
+    ledger.record_queries(total_q, total_q * row_bytes, waves=1)
+
+    # --- shuffle 3: PointerJump (contract the hook forest, Prop 3.2)
+    with ledger.shuffle("PointerJump", nbytes_of(np.asarray(hooks))):
+        parent = jnp.where(hooks >= 0, hooks, jnp.arange(nt, dtype=jnp.int32))
+        roots, jump_iters = pointer_jump(parent)
+    ledger.record_queries(int(jax.device_get(jump_iters)) * nt,
+                          int(jax.device_get(jump_iters)) * nt * 4, waves=1)
+
+    # --- shuffle 4: Contract (relabel + dedup on the ternarized edge list)
+    tu = jnp.asarray(tg.g.edges[:, 0]); tv = jnp.asarray(tg.g.edges[:, 1])
+    tw = jnp.asarray(tg.g.weights); teid = jnp.asarray(tg.orig_eid)
+    with ledger.shuffle("Contract", nbytes_of(tg.g.edges, tg.g.weights)):
+        cu, cv, cw, ceid, cvalid, live = contract_edges(
+            tu, tv, tw, teid, jnp.ones((tg.g.m,), bool), roots)
+        live_v = int(jax.device_get(live))
+
+    # --- shuffle 5: DenseMSF on the contracted graph
+    with ledger.shuffle("DenseMSF", 0):
+        dmask_dev, dlabels, phases = boruvka_inround(cu, cv, cw, ceid, cvalid,
+                                                     nt, max(m, 1))
+        dmask = _collect(dht, ledger, dmask_dev.astype(jnp.int32)).astype(bool)
+
+    # union of Prim-discovered edges and the dense-phase edges
+    prim_eids = np.asarray(jax.device_get(out_eids)).ravel()
+    prim_eids = prim_eids[prim_eids >= 0]
+    orig = tg.orig_eid[prim_eids]
+    orig = orig[orig >= 0]
+    mask = dmask.copy()
+    if m:
+        mask[orig] = True
+    stats = {
+        "path": "sparse",
+        "budget": budget,
+        "n_tern": nt,
+        "queries": total_q,
+        "avg_queries_per_vertex": total_q / max(nt, 1),
+        "pointer_jump_iters": int(jax.device_get(jump_iters)),
+        "contracted_vertices": live_v,
+        "shrink_factor": nt / max(live_v, 1),
+        "dense_phases": int(jax.device_get(phases)),
+        "stop_cases": {int(k): int(c) for k, c in zip(
+            *np.unique(np.asarray(jax.device_get(cases)), return_counts=True))},
+    }
+    return mask, stats
+
+
+def msf_mpc_boruvka(g: UGraph, seed: int = 0,
+                    ledger: Optional[RoundLedger] = None,
+                    max_phases: int = 200) -> Tuple[np.ndarray, dict]:
+    ledger = ledger if ledger is not None else RoundLedger("mpc_msf")
+    n, m = g.n, g.m
+    rng = np.random.default_rng(seed)
+    u = jnp.asarray(g.edges[:, 0]); v = jnp.asarray(g.edges[:, 1])
+    w = jnp.asarray(g.weights); eid = jnp.arange(m, dtype=jnp.int32)
+    valid = jnp.ones((m,), bool)
+    labels = jnp.arange(n, dtype=jnp.int32)
+    mask = np.zeros(m, bool)
+    phase_bytes = nbytes_of(g.edges, g.weights)
+    phases = 0
+    remaining = m
+    while remaining > 0 and phases < max_phases:
+        color = jnp.asarray(rng.random(n) < 0.5)
+        # the paper's MPC algorithm performs 3 shuffles per contraction phase
+        with ledger.shuffle(f"boruvka_minedge_{phases}", phase_bytes):
+            pass
+        with ledger.shuffle(f"boruvka_hook_{phases}", n * 4):
+            labels, selected, valid, rem = _mpc_boruvka_phase(
+                u, v, w, eid, valid, labels, color,
+                jnp.zeros((m,), bool))
+        with ledger.shuffle(f"boruvka_relabel_{phases}", phase_bytes):
+            mask |= np.asarray(jax.device_get(selected))
+            remaining = int(jax.device_get(rem))
+        phases += 1
+    return mask, {"phases": phases}
+
+
+# ==========================================================================
+# Connectivity (paper Theorem 1)
+# ==========================================================================
+def cc_ampc(g: UGraph, epsilon: float = 0.5, seed: int = 0,
+            ledger: Optional[RoundLedger] = None,
+            dht=None) -> Tuple[np.ndarray, dict]:
+    """Connected components; returns (labels(n,) canonical, stats)."""
+    ledger = ledger if ledger is not None else RoundLedger("ampc_cc")
+    n, m = g.n, g.m
+    if m == 0:
+        return np.arange(n, dtype=np.int64), {"queries": 0}
+    gw = UGraph(n, g.edges, np.arange(m, dtype=np.float32))  # unit-ish distinct
+    rng = np.random.default_rng(seed)
+
+    with ledger.shuffle("SortGraph", nbytes_of(gw.edges)):
+        tg = ternarize(gw)
+        nbr, nbw, nbe = tg.g.padded_adj(3)
+        nt = tg.g.n
+        rank = rng.permutation(nt).astype(np.float32)
+        budget = max(2, int(np.ceil(nt ** (epsilon / 2.0))))
+        # first tern slot of each original vertex (node_of is sorted)
+        first_slot = np.searchsorted(tg.node_of, np.arange(n))
+
+    with ledger.shuffle("PrimSearch", 0):
+        out_eids, hooks, cases, queries = truncated_prim(
+            jnp.asarray(nbr), jnp.asarray(nbw), jnp.asarray(nbe),
+            jnp.asarray(rank), budget)
+        total_q = int(jax.device_get(queries.sum()))
+    ledger.record_queries(total_q, total_q * 36, waves=1)
+
+    with ledger.shuffle("PointerJump", nbytes_of(np.asarray(hooks))):
+        parent = jnp.where(hooks >= 0, hooks, jnp.arange(nt, dtype=jnp.int32))
+        roots, jump_iters = pointer_jump(parent)
+
+    tu = jnp.asarray(tg.g.edges[:, 0]); tv = jnp.asarray(tg.g.edges[:, 1])
+    tw = jnp.asarray(tg.g.weights); teid = jnp.asarray(tg.orig_eid)
+    with ledger.shuffle("Contract", nbytes_of(tg.g.edges)):
+        cu, cv, cw, ceid, cvalid, live = contract_edges(
+            tu, tv, tw, teid, jnp.ones((tg.g.m,), bool), roots)
+
+    with ledger.shuffle("ForestConnectivity", 0):
+        _, dlabels, phases = boruvka_inround(cu, cv, cw, ceid, cvalid, nt,
+                                             max(m, 1))
+        # compose contractions: two genuine DHT reads of the label maps
+        if dht is not None:
+            final_tern = dht.lookup(dlabels, roots, ledger=ledger)
+            orig_dev = dht.lookup(final_tern,
+                                  jnp.asarray(first_slot, jnp.int32),
+                                  ledger=ledger)
+        else:
+            final_tern = jnp.take(dlabels, roots)
+            orig_dev = jnp.take(final_tern, jnp.asarray(first_slot))
+        orig_labels = np.asarray(jax.device_get(orig_dev)).astype(np.int64)
+
+    labels = _canonicalize(orig_labels)
+    stats = {
+        "queries": total_q,
+        "pointer_jump_iters": int(jax.device_get(jump_iters)),
+        "dense_phases": int(jax.device_get(phases)),
+        "num_components": int(len(np.unique(labels))),
+    }
+    return labels, stats
+
+
+def cc_mpc_hash_to_min(g: UGraph, ledger: Optional[RoundLedger] = None,
+                       max_phases: int = 200) -> Tuple[np.ndarray, dict]:
+    ledger = ledger if ledger is not None else RoundLedger("mpc_cc")
+    n = g.n
+    u = jnp.asarray(g.edges[:, 0]); v = jnp.asarray(g.edges[:, 1])
+    labels = jnp.arange(n, dtype=jnp.int32)
+    phases = 0
+    nb = nbytes_of(g.edges)
+    while phases < max_phases:
+        with ledger.shuffle(f"h2m_join_{phases}", nb):
+            labels, changed = _h2m_phase(u, v, labels)
+        with ledger.shuffle(f"h2m_update_{phases}", n * 4):
+            ch = bool(jax.device_get(changed))
+        phases += 1
+        if not ch:
+            break
+    labels = _canonicalize(np.asarray(jax.device_get(labels)).astype(np.int64))
+    return labels, {"phases": phases,
+                    "num_components": int(len(np.unique(labels)))}
+
+
+# ==========================================================================
+# 1-vs-2-Cycle (paper Section 5.6)
+# ==========================================================================
+def one_vs_two_ampc(g: UGraph, p: float = 1.0 / 64, seed: int = 0,
+                    ledger: Optional[RoundLedger] = None,
+                    max_steps: Optional[int] = None) -> Tuple[int, dict]:
+    """Returns (num_cycles, stats)."""
+    ledger = ledger if ledger is not None else RoundLedger("ampc_1v2c")
+    n = g.n
+    rng = np.random.default_rng(seed)
+    with ledger.shuffle("WriteKV", nbytes_of(g.edges)):
+        nbr = jnp.asarray(cycle_adjacency(g))
+        sampled = rng.random(n) < p
+        # guarantee at least one sample (paper: w.h.p. argument)
+        if not sampled.any():
+            sampled[rng.integers(n)] = True
+        sampled = jnp.asarray(sampled)
+    ms = max_steps or int(min(n + 1, np.ceil(8 * np.log(max(n, 2)) / p)))
+    with ledger.shuffle("SampleWalk", int(np.asarray(sampled).sum()) * 4):
+        ncomp, steps, ok = _walk_and_count(nbr, sampled, ms)
+        ncomp = int(jax.device_get(ncomp))
+        total_steps = int(jax.device_get(steps))
+        ok = bool(jax.device_get(ok))
+    ledger.record_queries(total_steps, total_steps * 12, waves=1)
+    if not ok:
+        raise RuntimeError("walk budget exceeded; increase p or max_steps")
+    return ncomp, {"samples": int(np.asarray(jax.device_get(sampled)).sum()),
+                   "walk_steps": total_steps, "max_steps": ms}
+
+
+def one_vs_two_mpc(g: UGraph, seed: int = 0,
+                   ledger: Optional[RoundLedger] = None) -> Tuple[int, dict]:
+    """CC-LocalContraction MPC baseline (Section 5.6): each phase removes the
+    rank-local-minima of every cycle and reconnects; 3 shuffles per phase,
+    O(log n) phases; the residual graph is finished in memory (the paper
+    switches to a single machine below 5e7 edges)."""
+    ledger = ledger if ledger is not None else RoundLedger("mpc_1v2c")
+    n = g.n
+    rng = np.random.default_rng(seed)
+    nbr = cycle_adjacency(g)
+    a = jnp.asarray(nbr[:, 0]); b = jnp.asarray(nbr[:, 1])
+    rank = jnp.asarray(rng.permutation(n).astype(np.float32))
+    parent = jnp.arange(n, dtype=jnp.int32)
+    alive = jnp.ones((n,), bool)
+    phases, remaining = 0, n
+    nb = nbytes_of(g.edges)
+    shrink = []
+    while remaining > 0 and phases < 200:
+        prev = remaining
+        with ledger.shuffle(f"lc_minima_{phases}", nb):
+            a, b, parent, alive, rem = _local_contraction_phase(
+                a, b, parent, alive, rank)
+        with ledger.shuffle(f"lc_reconnect_{phases}", nb):
+            remaining = int(jax.device_get(rem))
+        with ledger.shuffle(f"lc_relabel_{phases}", n * 4):
+            shrink.append(prev / max(remaining, 1))
+        phases += 1
+    # in-memory finish: pointer-jump parents to roots
+    roots, _ = pointer_jump(parent)
+    ncomp = int(len(np.unique(np.asarray(jax.device_get(roots)))))
+    return ncomp, {"phases": phases, "shrink_per_phase": shrink}
+
+
+# ==========================================================================
+# Registry entries — the engine's dispatch table
+# ==========================================================================
+@problem("mis", model="ampc", output="vertex_mask", aliases=("ampc-mis",),
+         table3_shuffles=2,
+         summary="LFMIS by in-round dependency fixpoint (Fig 1)")
+def _p_mis(ctx, g, **opts):
+    return mis_ampc(g, seed=ctx.seed, ledger=ctx.ledger, dht=ctx.dht, **opts)
+
+
+@problem("mis-mpc", model="mpc", output="vertex_mask", baseline_of="mis",
+         summary="MPC rootset baseline, 2 shuffles/phase (Fig 2)")
+def _p_mis_mpc(ctx, g, **opts):
+    return mis_mpc_rootset(g, seed=ctx.seed, ledger=ctx.ledger, **opts)
+
+
+@problem("matching", model="ampc", output="edge_mask",
+         aliases=("mm", "maximal-matching"), table3_shuffles=2,
+         summary="LFMM by in-round edge fixpoint (Section 5.4)")
+def _p_mm(ctx, g, **opts):
+    return mm_ampc(g, seed=ctx.seed, ledger=ctx.ledger, dht=ctx.dht, **opts)
+
+
+@problem("matching-levels", model="ampc", output="edge_mask",
+         summary="Algorithm 4: O(log log Δ) geometric sampling levels")
+def _p_mm_levels(ctx, g, **opts):
+    return mm_ampc_levels(g, seed=ctx.seed, ledger=ctx.ledger, **opts)
+
+
+@problem("matching-vertex-process", model="ampc", output="edge_mask",
+         summary="Theorem 2.2: n^ε-budget truncated vertex query process")
+def _p_mm_vertex(ctx, g, **opts):
+    return mm_ampc_vertex_process(g, epsilon=ctx.epsilon, seed=ctx.seed,
+                                  ledger=ctx.ledger, **opts)
+
+
+@problem("matching-mpc", model="mpc", output="edge_mask",
+         baseline_of="matching",
+         summary="MPC rootset baseline, 2 shuffles/phase")
+def _p_mm_mpc(ctx, g, **opts):
+    return mm_mpc_rootset(g, seed=ctx.seed, ledger=ctx.ledger, **opts)
+
+
+@problem("weighted-matching", model="ampc", output="edge_mask",
+         aliases=("mwm",), needs_weights=True, table3_shuffles=2,
+         summary="Corollary 4.1: greedy 1/2-approx MWM via erank injection")
+def _p_mwm(ctx, g, **opts):
+    return mwm_greedy_ampc(g, seed=ctx.seed, ledger=ctx.ledger, dht=ctx.dht,
+                           **opts)
+
+
+@problem("vertex-cover", model="ampc", output="vertex_mask",
+         summary="Corollary 4.1: 2-approx vertex cover = V(maximal matching)")
+def _p_vc(ctx, g, **opts):
+    return vertex_cover_2approx(g, seed=ctx.seed, ledger=ctx.ledger,
+                                dht=ctx.dht, **opts)
+
+
+@problem("msf", model="ampc", output="edge_mask", needs_weights=True,
+         table3_shuffles=5,
+         summary="Algorithm 2: 5-shuffle truncated-Prim MSF")
+def _p_msf(ctx, g, **opts):
+    return msf_ampc(g, epsilon=ctx.epsilon, seed=ctx.seed, ledger=ctx.ledger,
+                    dht=ctx.dht, **opts)
+
+
+@problem("msf-kkt", model="ampc", output="edge_mask", needs_weights=True,
+         summary="Algorithm 3: KKT sample + F-light filter + MSF")
+def _p_msf_kkt(ctx, g, **opts):
+    from ..core.kkt_filter import msf_kkt
+    return msf_kkt(g, epsilon=ctx.epsilon, seed=ctx.seed, ledger=ctx.ledger,
+                   **opts)
+
+
+@problem("msf-mpc", model="mpc", output="edge_mask", needs_weights=True,
+         baseline_of="msf",
+         summary="MPC red/blue Borůvka baseline, 3 shuffles/phase")
+def _p_msf_mpc(ctx, g, **opts):
+    return msf_mpc_boruvka(g, seed=ctx.seed, ledger=ctx.ledger, **opts)
+
+
+@problem("connectivity", model="ampc", output="labels", aliases=("cc",),
+         table3_shuffles=5,
+         summary="Theorem 1: MSF on unit weights + forest connectivity")
+def _p_cc(ctx, g, **opts):
+    return cc_ampc(g, epsilon=ctx.epsilon, seed=ctx.seed, ledger=ctx.ledger,
+                   dht=ctx.dht, **opts)
+
+
+@problem("connectivity-mpc", model="mpc", output="labels",
+         baseline_of="connectivity",
+         summary="MPC hash-to-min label propagation baseline")
+def _p_cc_mpc(ctx, g, **opts):
+    return cc_mpc_hash_to_min(g, ledger=ctx.ledger, **opts)
+
+
+@problem("one-vs-two", model="ampc", output="count", aliases=("1v2c",),
+         needs_cycles=True, table3_shuffles=2,
+         summary="Section 5.6: adaptive cycle walk, the AMPC/MPC separation")
+def _p_1v2(ctx, g, **opts):
+    return one_vs_two_ampc(g, seed=ctx.seed, ledger=ctx.ledger, **opts)
+
+
+@problem("one-vs-two-mpc", model="mpc", output="count",
+         baseline_of="one-vs-two", needs_cycles=True,
+         summary="CC-LocalContraction MPC baseline, 3 shuffles/phase")
+def _p_1v2_mpc(ctx, g, **opts):
+    return one_vs_two_mpc(g, seed=ctx.seed, ledger=ctx.ledger, **opts)

@@ -11,7 +11,6 @@ materialized launch per phase (the CC-LocalContraction stand-in used for the
 """
 from __future__ import annotations
 
-import functools
 from typing import Optional, Tuple
 
 import jax
@@ -19,10 +18,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..graph.coo import UGraph
-from .rounds import RoundLedger, nbytes_of
-from .ternarize import ternarize
-from .msf import (truncated_prim, pointer_jump, contract_edges,
-                  boruvka_inround)
+from .rounds import RoundLedger
 
 
 def _canonicalize(labels: np.ndarray) -> np.ndarray:
@@ -33,59 +29,6 @@ def _canonicalize(labels: np.ndarray) -> np.ndarray:
     rep = np.full(inv.max() + 1, n, np.int64)
     np.minimum.at(rep, inv, np.arange(n))
     return rep[inv]
-
-
-def cc_ampc(g: UGraph, epsilon: float = 0.5, seed: int = 0,
-            ledger: Optional[RoundLedger] = None) -> Tuple[np.ndarray, dict]:
-    """Connected components; returns (labels(n,) canonical, stats)."""
-    ledger = ledger if ledger is not None else RoundLedger("ampc_cc")
-    n, m = g.n, g.m
-    if m == 0:
-        return np.arange(n, dtype=np.int64), {"queries": 0}
-    gw = UGraph(n, g.edges, np.arange(m, dtype=np.float32))  # unit-ish distinct
-    rng = np.random.default_rng(seed)
-
-    with ledger.shuffle("SortGraph", nbytes_of(gw.edges)):
-        tg = ternarize(gw)
-        nbr, nbw, nbe = tg.g.padded_adj(3)
-        nt = tg.g.n
-        rank = rng.permutation(nt).astype(np.float32)
-        budget = max(2, int(np.ceil(nt ** (epsilon / 2.0))))
-        # first tern slot of each original vertex (node_of is sorted)
-        first_slot = np.searchsorted(tg.node_of, np.arange(n))
-
-    with ledger.shuffle("PrimSearch", 0):
-        out_eids, hooks, cases, queries = truncated_prim(
-            jnp.asarray(nbr), jnp.asarray(nbw), jnp.asarray(nbe),
-            jnp.asarray(rank), budget)
-        total_q = int(jax.device_get(queries.sum()))
-    ledger.record_queries(total_q, total_q * 36, waves=1)
-
-    with ledger.shuffle("PointerJump", nbytes_of(np.asarray(hooks))):
-        parent = jnp.where(hooks >= 0, hooks, jnp.arange(nt, dtype=jnp.int32))
-        roots, jump_iters = pointer_jump(parent)
-
-    tu = jnp.asarray(tg.g.edges[:, 0]); tv = jnp.asarray(tg.g.edges[:, 1])
-    tw = jnp.asarray(tg.g.weights); teid = jnp.asarray(tg.orig_eid)
-    with ledger.shuffle("Contract", nbytes_of(tg.g.edges)):
-        cu, cv, cw, ceid, cvalid, live = contract_edges(
-            tu, tv, tw, teid, jnp.ones((tg.g.m,), bool), roots)
-
-    with ledger.shuffle("ForestConnectivity", 0):
-        _, dlabels, phases = boruvka_inround(cu, cv, cw, ceid, cvalid, nt,
-                                             max(m, 1))
-        final_tern = jnp.take(dlabels, roots)          # compose contractions
-        orig_labels = jnp.take(final_tern, jnp.asarray(first_slot))
-        orig_labels = np.asarray(jax.device_get(orig_labels)).astype(np.int64)
-
-    labels = _canonicalize(orig_labels)
-    stats = {
-        "queries": total_q,
-        "pointer_jump_iters": int(jax.device_get(jump_iters)),
-        "dense_phases": int(jax.device_get(phases)),
-        "num_components": int(len(np.unique(labels))),
-    }
-    return labels, stats
 
 
 # --------------------------------------------------------------------------
@@ -106,22 +49,22 @@ def _h2m_phase(u, v, labels):
     return new, changed
 
 
+def cc_ampc(g: UGraph, epsilon: float = 0.5, seed: int = 0,
+            ledger: Optional[RoundLedger] = None) -> Tuple[np.ndarray, dict]:
+    """Deprecated shim over repro.ampc.solvers.cc_ampc."""
+    from ..ampc import solvers
+    from ..ampc.deprecation import warn_once
+    warn_once("repro.core.connectivity.cc_ampc",
+              'AmpcEngine().solve(g, "connectivity")')
+    return solvers.cc_ampc(g, epsilon=epsilon, seed=seed, ledger=ledger)
+
+
 def cc_mpc_hash_to_min(g: UGraph, ledger: Optional[RoundLedger] = None,
                        max_phases: int = 200) -> Tuple[np.ndarray, dict]:
-    ledger = ledger if ledger is not None else RoundLedger("mpc_cc")
-    n = g.n
-    u = jnp.asarray(g.edges[:, 0]); v = jnp.asarray(g.edges[:, 1])
-    labels = jnp.arange(n, dtype=jnp.int32)
-    phases = 0
-    nb = nbytes_of(g.edges)
-    while phases < max_phases:
-        with ledger.shuffle(f"h2m_join_{phases}", nb):
-            labels, changed = _h2m_phase(u, v, labels)
-        with ledger.shuffle(f"h2m_update_{phases}", n * 4):
-            ch = bool(jax.device_get(changed))
-        phases += 1
-        if not ch:
-            break
-    labels = _canonicalize(np.asarray(jax.device_get(labels)).astype(np.int64))
-    return labels, {"phases": phases,
-                    "num_components": int(len(np.unique(labels)))}
+    """Deprecated shim over repro.ampc.solvers.cc_mpc_hash_to_min."""
+    from ..ampc import solvers
+    from ..ampc.deprecation import warn_once
+    warn_once("repro.core.connectivity.cc_mpc_hash_to_min",
+              'AmpcEngine().solve(g, "connectivity-mpc")')
+    return solvers.cc_mpc_hash_to_min(g, ledger=ledger,
+                                      max_phases=max_phases)

@@ -128,11 +128,9 @@ def routed_lookup(values, keys, mesh, axis_name: str, capacity: int | None = Non
         back = back.reshape((n_shards * cap,) + back.shape[2:])
         # un-permute: sorted-by-owner position -> uniq position -> original
         uniq_vals = jnp.zeros((sk.shape[0],) + back.shape[1:], back.dtype)
-        got = jnp.where(valid, jnp.arange(sk.shape[0]), 0)
         src = jnp.take(back, jnp.where(valid, flat_pos, 0), axis=0)
         uniq_vals = uniq_vals.at[order].set(
             jnp.where(valid[(...,) + (None,) * (src.ndim - 1)], src, 0))
-        del got
         out = jnp.take(uniq_vals, inv, axis=0)
         return out, n_unique[None], overflow[None]
 
@@ -147,20 +145,67 @@ def routed_lookup(values, keys, mesh, axis_name: str, capacity: int | None = Non
 
 
 class ShardedDHT:
-    """Host-level convenience wrapper with ledger accounting."""
+    """Host-level DHT snapshot with uniform ledger accounting.
 
-    def __init__(self, values: jnp.ndarray, ledger=None, value_bytes: int | None = None):
+    Without a ``mesh`` every lookup takes the local gather path
+    (``lookup``); with a ``mesh`` it takes the explicit all_to_all router
+    (``routed_lookup``).  Both paths report query / byte / dedup / overflow
+    counters through the *same* ledger calls, so AMPC accounting is
+    backend-independent (the paper's DHT abstraction).
+    """
+
+    def __init__(self, values: jnp.ndarray, ledger=None,
+                 value_bytes: int | None = None, mesh=None,
+                 axis_name: str = "dht", capacity: int | None = None):
         self.values = values
         self.ledger = ledger
+        self.mesh = mesh
+        self.axis_name = axis_name
+        self.capacity = capacity
         self._row_bytes = value_bytes or int(
             values.dtype.itemsize * (values.size // max(values.shape[0], 1)))
 
+    @property
+    def backend(self) -> str:
+        return "local" if self.mesh is None else "routed"
+
+    def _routed(self, keys, dedup: bool):
+        """Pad rows/keys to the shard grid, route, then slice back."""
+        n_shards = self.mesh.shape[self.axis_name]
+        vals = self.values
+        pad_rows = (-vals.shape[0]) % n_shards
+        if pad_rows:
+            fill = jnp.zeros((pad_rows,) + vals.shape[1:], vals.dtype)
+            vals = jnp.concatenate([vals, fill])
+        q = int(keys.size)
+        pad_q = (-q) % n_shards
+        k = keys
+        if pad_q:
+            k = jnp.concatenate([k, jnp.full((pad_q,), -1, jnp.int32)])
+        out, n_unique, overflow = routed_lookup(
+            vals, k, self.mesh, self.axis_name, capacity=self.capacity,
+            dedup=dedup)
+        if pad_q:
+            out = out[:q]
+        return out, n_unique, overflow
+
     def lookup(self, keys, dedup: bool = True):
-        out, n_unique = lookup(self.values, keys, dedup=dedup)
+        keys = jnp.asarray(keys, jnp.int32)
+        # negative keys are padding: they are never queried, so they count
+        # neither as queries nor as dedup savings, on either backend
+        valid = int(jax.device_get((keys >= 0).sum()))
+        if self.mesh is None:
+            out, n_unique = lookup(self.values, keys, dedup=dedup)
+            if not dedup:
+                n_unique = valid
+            overflow = 0
+        else:
+            out, n_unique, overflow = self._routed(keys, dedup)
+            overflow = int(jax.device_get(overflow))
         if self.ledger is not None:
             nu = int(jax.device_get(n_unique))
-            total = int(keys.size)
             self.ledger.record_queries(
                 nu, nu * (self._row_bytes + 4), waves=1,
-                deduped_away=(total - nu) if dedup else 0)
+                deduped_away=(valid - nu) if dedup else 0,
+                overflow=overflow)
         return out

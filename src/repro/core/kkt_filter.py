@@ -274,7 +274,7 @@ def msf_kkt(g: UGraph, epsilon: float = 0.5, seed: int = 0,
             ledger: Optional[RoundLedger] = None) -> Tuple[np.ndarray, dict]:
     """Algorithm 3: sample -> MSF(sample) -> F-light filter -> MSF(F ∪ light).
     Returns (mask over g.edges, stats)."""
-    from .msf import msf_ampc
+    from ..ampc.solvers import msf_ampc
     ledger = ledger if ledger is not None else RoundLedger("ampc_msf_kkt")
     n, m = g.n, g.m
     rng = np.random.default_rng(seed)

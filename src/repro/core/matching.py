@@ -21,6 +21,9 @@ sequential oracle.
   next launch; O(1/ε) launches empirically, total queries O(m + n^{1+ε}).
 
 ``mm_mpc_rootset``     — the MPC baseline of Section 5.4 (2 shuffles/phase).
+
+The driver functions are deprecated shims over ``repro.ampc.solvers``; the
+jitted fixpoint primitives (``_mm_wave``, ``_mm_fixpoint``) live here.
 """
 from __future__ import annotations
 
@@ -32,7 +35,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..graph.coo import UGraph
-from .rounds import RoundLedger, nbytes_of
+from .rounds import RoundLedger
 
 UNKNOWN, IN, OUT = 0, 1, 2
 BIGF = jnp.float32(jnp.inf)
@@ -89,164 +92,56 @@ def _mm_fixpoint(u, v, erank, n: int, estatus0):
     return estatus, iters, q0, q1
 
 
+# --------------------------------------------------------------------------
+# Deprecated shims — the drivers moved to repro.ampc.solvers; prefer
+# AmpcEngine().solve(g, "matching") and friends.
+# --------------------------------------------------------------------------
 def mm_ampc(g: UGraph, seed: int = 0,
             ledger: Optional[RoundLedger] = None,
-            caching: bool = True) -> Tuple[np.ndarray, dict]:
-    """Returns (in_mm bool(m,), stats)."""
-    ledger = ledger if ledger is not None else RoundLedger("ampc_mm")
-    n, m = g.n, g.m
-    rng = np.random.default_rng(seed)
-    erank = rng.permutation(m).astype(np.float32)
+            caching: bool = True,
+            erank: "np.ndarray | None" = None) -> Tuple[np.ndarray, dict]:
+    """Deprecated shim over repro.ampc.solvers.mm_ampc.
 
-    with ledger.shuffle("SortEdges+WriteKV", nbytes_of(g.edges) * 2):
-        u = jnp.asarray(g.edges[:, 0]); v = jnp.asarray(g.edges[:, 1])
-        jrank = jnp.asarray(erank)
-
-    with ledger.shuffle("IsInMM", m):
-        estatus, iters, q0, q1 = _mm_fixpoint(
-            u, v, jrank, n, jnp.zeros((m,), jnp.int32))
-        estatus = np.asarray(jax.device_get(estatus))
-        it = int(jax.device_get(iters))
-        qn = int(jax.device_get(q0)); qd = int(jax.device_get(q1))
-    queries = qd if caching else qn
-    ledger.record_queries(queries, queries * 12, waves=it,
-                          deduped_away=(qn - qd) if caching else 0)
-    return estatus == IN, {"fixpoint_iters": it, "queries_nodedup": qn,
-                           "queries_dedup": qd, "erank": erank}
+    ``erank`` is the Corollary-4.1 rank-injection point (weighted matching
+    passes decreasing-weight ranks); omitted = random permutation from seed.
+    """
+    from ..ampc import solvers
+    from ..ampc.deprecation import warn_once
+    warn_once("repro.core.matching.mm_ampc",
+              'AmpcEngine().solve(g, "matching")')
+    return solvers.mm_ampc(g, seed=seed, ledger=ledger, caching=caching,
+                           erank=erank)
 
 
 def mm_ampc_levels(g: UGraph, seed: int = 0,
                    ledger: Optional[RoundLedger] = None) -> Tuple[np.ndarray, dict]:
-    """Algorithm 4: O(log log Δ) geometric sampling levels."""
-    ledger = ledger if ledger is not None else RoundLedger("ampc_mm_levels")
-    n, m = g.n, g.m
-    rng = np.random.default_rng(seed)
-    erank01 = rng.permutation(m).astype(np.float64) / max(m, 1)  # π(e) in [0,1)
-    delta = int(g.degrees().max()) if m else 1
-    k = int(np.ceil(np.log2(max(np.log2(max(delta, 2)), 1.000001)))) + 1
-    u = jnp.asarray(g.edges[:, 0]); v = jnp.asarray(g.edges[:, 1])
-    jrank = jnp.asarray(erank01.astype(np.float32))
-    estatus = jnp.zeros((m,), jnp.int32)
-    level_stats = []
-    ten_log_n = 10 * np.log(max(n, 2))
-    for i in range(1, k + 1):
-        # current degree of the residual graph
-        unk = estatus == UNKNOWN
-        deg = np.zeros(n, np.int64)
-        eun = np.asarray(jax.device_get(unk))
-        np.add.at(deg, g.edges[eun, 0], 1)
-        np.add.at(deg, g.edges[eun, 1], 1)
-        cur_delta = int(deg.max()) if eun.any() else 0
-        if cur_delta == 0:
-            break
-        if cur_delta > ten_log_n:
-            thresh = float(delta) ** (-(0.5 ** i))
-        else:
-            thresh = 1.1  # H_i = G_i
-        in_h = jnp.asarray(erank01 <= thresh) & unk
-        with ledger.shuffle(f"level_{i}_greedyMM", nbytes_of(g.edges)):
-            # resolve the sampled subgraph completely (one AMPC launch)
-            sub_status = jnp.where(in_h, UNKNOWN, OUT + 1)  # sentinel skip
-            sub_status = jnp.where(in_h, jnp.int32(UNKNOWN), jnp.int32(3))
-            st, iters, q0, q1 = _mm_fixpoint(
-                u, v, jnp.where(in_h, jrank, BIGF), n,
-                jnp.where(in_h, jnp.int32(UNKNOWN), jnp.int32(OUT)))
-            # edges of H_i resolved; commit IN edges, kill touched vertices
-            new_in = (st == IN) & in_h
-            estatus = jnp.where(new_in, IN, estatus)
-            matched = jnp.zeros((n,), jnp.int32)
-            matched = matched.at[jnp.where(estatus == IN, u, n)].set(1, mode="drop")
-            matched = matched.at[jnp.where(estatus == IN, v, n)].set(1, mode="drop")
-            dead = (estatus == UNKNOWN) & ((matched[u] == 1) | (matched[v] == 1))
-            estatus = jnp.where(dead, OUT, estatus)
-            # H_i \ M_i edges whose endpoints survive go back to G_{i+1}:
-            # (they were OUT in the sub-run only if endpoint matched — handled)
-        level_stats.append({"level": i, "delta": cur_delta,
-                            "threshold": thresh,
-                            "iters": int(jax.device_get(iters))})
-    st = np.asarray(jax.device_get(estatus))
-    return st == IN, {"levels": level_stats, "k": k,
-                      "erank": erank01.astype(np.float32)}
+    """Deprecated shim over repro.ampc.solvers.mm_ampc_levels."""
+    from ..ampc import solvers
+    from ..ampc.deprecation import warn_once
+    warn_once("repro.core.matching.mm_ampc_levels",
+              'AmpcEngine().solve(g, "matching-levels")')
+    return solvers.mm_ampc_levels(g, seed=seed, ledger=ledger)
 
 
 def mm_ampc_vertex_process(g: UGraph, epsilon: float = 0.5, seed: int = 0,
                            ledger: Optional[RoundLedger] = None,
                            ) -> Tuple[np.ndarray, dict]:
-    """Theorem 2 part 2: vertex-started truncated query process.
-
-    Each launch gives every vertex a fresh budget of n^ε queries; decisions on
-    an edge are applied only while at least one endpoint still has budget, so
-    resolution is delayed — never altered — and the output is the exact LFMM.
-    """
-    ledger = ledger if ledger is not None else RoundLedger("ampc_mm_vertex")
-    n, m = g.n, g.m
-    rng = np.random.default_rng(seed)
-    erank = rng.permutation(m).astype(np.float32)
-    u = jnp.asarray(g.edges[:, 0]); v = jnp.asarray(g.edges[:, 1])
-    jrank = jnp.asarray(erank)
-    budget = max(4, int(np.ceil(n ** epsilon)))
-
-    @functools.partial(jax.jit, static_argnames=())
-    def launch(estatus):
-        qcount0 = jnp.zeros((n,), jnp.int32)
-
-        def cond(s):
-            estatus, qcount, it, q = s
-            unk = estatus == UNKNOWN
-            active = (qcount[u] < budget) | (qcount[v] < budget)
-            return jnp.any(unk & active) & (it < 4 * budget)
-
-        def body(s):
-            estatus, qcount, it, q = s
-            active = (qcount[u] < budget) | (qcount[v] < budget)
-            new, _ = _mm_wave(estatus, u, v, jrank, n, active_edge=active)
-            unk = estatus == UNKNOWN
-            # each unresolved active edge costs one query at each live endpoint
-            cost = jnp.zeros((n,), jnp.int32)
-            live = unk & active
-            cost = cost.at[jnp.where(live, u, n)].add(1, mode="drop")
-            cost = cost.at[jnp.where(live, v, n)].add(1, mode="drop")
-            return new, qcount + cost, it + 1, q + live.sum()
-
-        return jax.lax.while_loop(cond, body,
-                                  (estatus, qcount0, jnp.int32(0), jnp.int32(0)))
-
-    estatus = jnp.zeros((m,), jnp.int32)
-    launches, total_q = 0, 0
-    while bool(jax.device_get(jnp.any(estatus == UNKNOWN))) and launches < 64:
-        with ledger.shuffle(f"vertex_process_{launches}", m):
-            estatus, qcount, iters, q = launch(estatus)
-            total_q += int(jax.device_get(q))
-        launches += 1
-    ledger.record_queries(total_q, total_q * 12, waves=launches)
-    st = np.asarray(jax.device_get(estatus))
-    return st == IN, {"launches": launches, "budget": budget,
-                      "queries": total_q, "erank": erank}
+    """Deprecated shim over repro.ampc.solvers.mm_ampc_vertex_process."""
+    from ..ampc import solvers
+    from ..ampc.deprecation import warn_once
+    warn_once("repro.core.matching.mm_ampc_vertex_process",
+              'AmpcEngine().solve(g, "matching-vertex-process")')
+    return solvers.mm_ampc_vertex_process(g, epsilon=epsilon, seed=seed,
+                                          ledger=ledger)
 
 
 def mm_mpc_rootset(g: UGraph, seed: int = 0,
                    ledger: Optional[RoundLedger] = None,
                    max_phases: int = 500) -> Tuple[np.ndarray, dict]:
-    ledger = ledger if ledger is not None else RoundLedger("mpc_mm")
-    n, m = g.n, g.m
-    rng = np.random.default_rng(seed)
-    erank = rng.permutation(m).astype(np.float32)
-    u = jnp.asarray(g.edges[:, 0]); v = jnp.asarray(g.edges[:, 1])
-    jrank = jnp.asarray(erank)
-
-    @jax.jit
-    def phase(estatus):
-        new, _ = _mm_wave(estatus, u, v, jrank, n)
-        return new, (new == UNKNOWN).sum()
-
-    estatus = jnp.zeros((m,), jnp.int32)
-    phases, remaining = 0, m
-    nb = nbytes_of(g.edges)
-    while remaining > 0 and phases < max_phases:
-        with ledger.shuffle(f"rootset_mark_{phases}", nb):
-            estatus, rem = phase(estatus)
-        with ledger.shuffle(f"rootset_remove_{phases}", nb):
-            remaining = int(jax.device_get(rem))
-        phases += 1
-    st = np.asarray(jax.device_get(estatus))
-    return st == IN, {"phases": phases, "erank": erank}
+    """Deprecated shim over repro.ampc.solvers.mm_mpc_rootset."""
+    from ..ampc import solvers
+    from ..ampc.deprecation import warn_once
+    warn_once("repro.core.matching.mm_mpc_rootset",
+              'AmpcEngine().solve(g, "matching-mpc")')
+    return solvers.mm_mpc_rootset(g, seed=seed, ledger=ledger,
+                                  max_phases=max_phases)

@@ -27,7 +27,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..graph.coo import UGraph
-from .rounds import RoundLedger, nbytes_of
+from .rounds import RoundLedger
 
 UNKNOWN, IN, OUT = 0, 1, 2
 
@@ -76,72 +76,27 @@ def _mis_fixpoint(senders, receivers, rank, n: int):
     return status, iters, q0, q1
 
 
+# --------------------------------------------------------------------------
+# Deprecated shims — the drivers moved to repro.ampc.solvers; prefer
+# AmpcEngine().solve(g, "mis") / .solve(g, "mis-mpc").
+# --------------------------------------------------------------------------
 def mis_ampc(g: UGraph, seed: int = 0,
              ledger: Optional[RoundLedger] = None,
              caching: bool = True) -> Tuple[np.ndarray, dict]:
-    """Returns (in_mis bool(n,), stats)."""
-    ledger = ledger if ledger is not None else RoundLedger("ampc_mis")
-    n = g.n
-    rng = np.random.default_rng(seed)
-    rank = rng.permutation(n).astype(np.float32)
-
-    # shuffle 1: build the rank-directed graph, write to the DHT (Fig 1 step 1-2)
-    with ledger.shuffle("DirectEdges+WriteKV", nbytes_of(g.edges) * 2):
-        s, r, _, _ = g.symmetric()
-        senders = jnp.asarray(s); receivers = jnp.asarray(r)
-        jrank = jnp.asarray(rank)
-
-    # shuffle 2: IsInMIS search — adaptive queries against the snapshot
-    with ledger.shuffle("IsInMIS", n * 4):
-        status, iters, q0, q1 = _mis_fixpoint(senders, receivers, jrank, n)
-        status = np.asarray(jax.device_get(status))
-        it = int(jax.device_get(iters))
-        qn = int(jax.device_get(q0)); qd = int(jax.device_get(q1))
-    queries = qd if caching else qn
-    row_bytes = 8  # nodeid + status
-    ledger.record_queries(queries, queries * row_bytes, waves=it,
-                          deduped_away=(qn - qd) if caching else 0)
-    assert not (status == UNKNOWN).any()
-    return status == IN, {"fixpoint_iters": it, "queries_nodedup": qn,
-                          "queries_dedup": qd,
-                          "cache_savings_factor": qn / max(qd, 1)}
+    """Deprecated shim over repro.ampc.solvers.mis_ampc."""
+    from ..ampc import solvers
+    from ..ampc.deprecation import warn_once
+    warn_once("repro.core.mis.mis_ampc", 'AmpcEngine().solve(g, "mis")')
+    return solvers.mis_ampc(g, seed=seed, ledger=ledger, caching=caching)
 
 
 def mis_mpc_rootset(g: UGraph, seed: int = 0,
                     ledger: Optional[RoundLedger] = None,
                     max_phases: int = 500) -> Tuple[np.ndarray, dict]:
-    ledger = ledger if ledger is not None else RoundLedger("mpc_mis")
-    n = g.n
-    rng = np.random.default_rng(seed)
-    rank = jnp.asarray(rng.permutation(n).astype(np.float32))
-    s, r, _, _ = g.symmetric()
-    senders = jnp.asarray(s); receivers = jnp.asarray(r)
-
-    @jax.jit
-    def phase(status):
-        s_unk = status[senders] == UNKNOWN
-        lower = rank[receivers] < rank[senders]
-        blocked = s_unk & lower & (status[receivers] != OUT)
-        has_block = jax.ops.segment_max(blocked.astype(jnp.int32), senders,
-                                        num_segments=n)
-        nbr_in = s_unk & (status[receivers] == IN)
-        has_in = jax.ops.segment_max(nbr_in.astype(jnp.int32), senders,
-                                     num_segments=n)
-        unk = status == UNKNOWN
-        status = jnp.where(unk & (has_in > 0), OUT, status)
-        status = jnp.where(unk & (has_in <= 0) & (has_block <= 0), IN, status)
-        return status, (status == UNKNOWN).sum()
-
-    status = jnp.zeros((n,), jnp.int32)
-    phases = 0
-    nb = nbytes_of(g.edges) * 2
-    remaining = n
-    while remaining > 0 and phases < max_phases:
-        # paper Fig 2: 2 shuffles per phase (mark-to-remove join, removal join)
-        with ledger.shuffle(f"rootset_mark_{phases}", nb):
-            status, rem = phase(status)
-        with ledger.shuffle(f"rootset_remove_{phases}", nb):
-            remaining = int(jax.device_get(rem))
-        phases += 1
-    status = np.asarray(jax.device_get(status))
-    return status == IN, {"phases": phases}
+    """Deprecated shim over repro.ampc.solvers.mis_mpc_rootset."""
+    from ..ampc import solvers
+    from ..ampc.deprecation import warn_once
+    warn_once("repro.core.mis.mis_mpc_rootset",
+              'AmpcEngine().solve(g, "mis-mpc")')
+    return solvers.mis_mpc_rootset(g, seed=seed, ledger=ledger,
+                                   max_phases=max_phases)

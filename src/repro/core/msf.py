@@ -16,6 +16,9 @@ Pieces:
     3 shuffles per phase, O(log n) phases).
 
 All functions return a boolean mask over the *original* edge ids.
+
+The ``msf_ampc`` / ``msf_mpc_boruvka`` drivers are deprecated shims over
+``repro.ampc.solvers``; the jitted primitives live here.
 """
 from __future__ import annotations
 
@@ -27,8 +30,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..graph.coo import UGraph
-from .rounds import RoundLedger, nbytes_of
-from .ternarize import ternarize
+from .rounds import RoundLedger
 
 INF = jnp.float32(jnp.inf)
 
@@ -230,92 +232,6 @@ boruvka_inround = functools.partial(jax.jit, static_argnames=("n_labels", "max_e
 
 
 # --------------------------------------------------------------------------
-# Algorithm 2 driver (AMPC): 5 materialized shuffles, like the paper's impl
-# --------------------------------------------------------------------------
-def msf_ampc(g: UGraph, epsilon: float = 0.5, seed: int = 0,
-             ledger: Optional[RoundLedger] = None,
-             skip_ternarize_if_dense: bool = True) -> Tuple[np.ndarray, dict]:
-    """Compute the MSF mask over g.edges.  Returns (mask, stats)."""
-    ledger = ledger if ledger is not None else RoundLedger("ampc_msf")
-    assert g.weights is not None
-    n, m = g.n, g.m
-    rng = np.random.default_rng(seed)
-
-    dense = skip_ternarize_if_dense and m >= n ** (1.0 + epsilon / 2.0)
-    if dense:
-        # Proposition 3.1 path: run the dense routine directly.
-        u = jnp.asarray(g.edges[:, 0]); v = jnp.asarray(g.edges[:, 1])
-        w = jnp.asarray(g.weights); eid = jnp.arange(m, dtype=jnp.int32)
-        valid = jnp.ones((m,), bool)
-        with ledger.shuffle("DenseMSF", nbytes_of(g.edges, g.weights)):
-            mask, _, phases = boruvka_inround(u, v, w, eid, valid, n, m)
-            mask = np.asarray(jax.device_get(mask))
-        return mask, {"phases": int(jax.device_get(phases)), "path": "dense"}
-
-    # --- shuffle 1: SortGraph (ternarize + build sorted adjacency, write DHT)
-    with ledger.shuffle("SortGraph", nbytes_of(g.edges, g.weights)):
-        tg = ternarize(g)
-        nbr, nbw, nbe = tg.g.padded_adj(3)
-        nt = tg.g.n
-        rank = rng.permutation(nt).astype(np.float32)
-        budget = max(2, int(np.ceil(nt ** (epsilon / 2.0))))
-    ledger.record_queries(0, 0, waves=0)
-
-    # --- shuffle 2: PrimSearch (adaptive queries against the DHT snapshot)
-    jn_nbr, jn_nbw, jn_nbe = jnp.asarray(nbr), jnp.asarray(nbw), jnp.asarray(nbe)
-    jn_rank = jnp.asarray(rank)
-    with ledger.shuffle("PrimSearch", 0):
-        out_eids, hooks, cases, queries = truncated_prim(
-            jn_nbr, jn_nbw, jn_nbe, jn_rank, budget)
-        total_q = int(jax.device_get(queries.sum()))
-    row_bytes = 3 * (4 + 4 + 4)
-    ledger.record_queries(total_q, total_q * row_bytes, waves=1)
-
-    # --- shuffle 3: PointerJump (contract the hook forest, Prop 3.2)
-    with ledger.shuffle("PointerJump", nbytes_of(np.asarray(hooks))):
-        parent = jnp.where(hooks >= 0, hooks, jnp.arange(nt, dtype=jnp.int32))
-        roots, jump_iters = pointer_jump(parent)
-    ledger.record_queries(int(jax.device_get(jump_iters)) * nt,
-                          int(jax.device_get(jump_iters)) * nt * 4, waves=1)
-
-    # --- shuffle 4: Contract (relabel + dedup on the ternarized edge list)
-    tu = jnp.asarray(tg.g.edges[:, 0]); tv = jnp.asarray(tg.g.edges[:, 1])
-    tw = jnp.asarray(tg.g.weights); teid = jnp.asarray(tg.orig_eid)
-    with ledger.shuffle("Contract", nbytes_of(tg.g.edges, tg.g.weights)):
-        cu, cv, cw, ceid, cvalid, live = contract_edges(
-            tu, tv, tw, teid, jnp.ones((tg.g.m,), bool), roots)
-        live_v = int(jax.device_get(live))
-
-    # --- shuffle 5: DenseMSF on the contracted graph
-    with ledger.shuffle("DenseMSF", 0):
-        dmask, dlabels, phases = boruvka_inround(cu, cv, cw, ceid, cvalid, nt, max(m, 1))
-        dmask = np.asarray(jax.device_get(dmask))
-
-    # union of Prim-discovered edges and the dense-phase edges
-    prim_eids = np.asarray(jax.device_get(out_eids)).ravel()
-    prim_eids = prim_eids[prim_eids >= 0]
-    orig = tg.orig_eid[prim_eids]
-    orig = orig[orig >= 0]
-    mask = dmask.copy()
-    if m:
-        mask[orig] = True
-    stats = {
-        "path": "sparse",
-        "budget": budget,
-        "n_tern": nt,
-        "queries": total_q,
-        "avg_queries_per_vertex": total_q / max(nt, 1),
-        "pointer_jump_iters": int(jax.device_get(jump_iters)),
-        "contracted_vertices": live_v,
-        "shrink_factor": nt / max(live_v, 1),
-        "dense_phases": int(jax.device_get(phases)),
-        "stop_cases": {int(k): int(c) for k, c in zip(
-            *np.unique(np.asarray(jax.device_get(cases)), return_counts=True))},
-    }
-    return mask, stats
-
-
-# --------------------------------------------------------------------------
 # MPC baseline: red/blue Borůvka, 3 shuffles per phase (paper Section 5.5)
 # --------------------------------------------------------------------------
 @jax.jit
@@ -337,31 +253,30 @@ def _mpc_boruvka_phase(u, v, w, eid, valid, labels, color, max_eid_mask):
     return labels, selected, new_valid, remaining
 
 
+
+
+# --------------------------------------------------------------------------
+# Deprecated shims — the drivers moved to repro.ampc.solvers; prefer
+# AmpcEngine().solve(g, "msf") / .solve(g, "msf-mpc").
+# --------------------------------------------------------------------------
+def msf_ampc(g: UGraph, epsilon: float = 0.5, seed: int = 0,
+             ledger: Optional[RoundLedger] = None,
+             skip_ternarize_if_dense: bool = True) -> Tuple[np.ndarray, dict]:
+    """Deprecated shim over repro.ampc.solvers.msf_ampc."""
+    from ..ampc import solvers
+    from ..ampc.deprecation import warn_once
+    warn_once("repro.core.msf.msf_ampc", 'AmpcEngine().solve(g, "msf")')
+    return solvers.msf_ampc(g, epsilon=epsilon, seed=seed, ledger=ledger,
+                            skip_ternarize_if_dense=skip_ternarize_if_dense)
+
+
 def msf_mpc_boruvka(g: UGraph, seed: int = 0,
                     ledger: Optional[RoundLedger] = None,
                     max_phases: int = 200) -> Tuple[np.ndarray, dict]:
-    ledger = ledger if ledger is not None else RoundLedger("mpc_msf")
-    n, m = g.n, g.m
-    rng = np.random.default_rng(seed)
-    u = jnp.asarray(g.edges[:, 0]); v = jnp.asarray(g.edges[:, 1])
-    w = jnp.asarray(g.weights); eid = jnp.arange(m, dtype=jnp.int32)
-    valid = jnp.ones((m,), bool)
-    labels = jnp.arange(n, dtype=jnp.int32)
-    mask = np.zeros(m, bool)
-    phase_bytes = nbytes_of(g.edges, g.weights)
-    phases = 0
-    remaining = m
-    while remaining > 0 and phases < max_phases:
-        color = jnp.asarray(rng.random(n) < 0.5)
-        # the paper's MPC algorithm performs 3 shuffles per contraction phase
-        with ledger.shuffle(f"boruvka_minedge_{phases}", phase_bytes):
-            pass
-        with ledger.shuffle(f"boruvka_hook_{phases}", n * 4):
-            labels, selected, valid, rem = _mpc_boruvka_phase(
-                u, v, w, eid, valid, labels, color,
-                jnp.zeros((m,), bool))
-        with ledger.shuffle(f"boruvka_relabel_{phases}", phase_bytes):
-            mask |= np.asarray(jax.device_get(selected))
-            remaining = int(jax.device_get(rem))
-        phases += 1
-    return mask, {"phases": phases}
+    """Deprecated shim over repro.ampc.solvers.msf_mpc_boruvka."""
+    from ..ampc import solvers
+    from ..ampc.deprecation import warn_once
+    warn_once("repro.core.msf.msf_mpc_boruvka",
+              'AmpcEngine().solve(g, "msf-mpc")')
+    return solvers.msf_mpc_boruvka(g, seed=seed, ledger=ledger,
+                                   max_phases=max_phases)

@@ -19,7 +19,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..graph.coo import UGraph
-from .rounds import RoundLedger, nbytes_of
+from .rounds import RoundLedger
 
 
 def cycle_adjacency(g: UGraph) -> np.ndarray:
@@ -89,33 +89,6 @@ def _walk_and_count(nbr, sampled, max_steps: int):
     return ncomp, total_steps, ok
 
 
-def one_vs_two_ampc(g: UGraph, p: float = 1.0 / 64, seed: int = 0,
-                    ledger: Optional[RoundLedger] = None,
-                    max_steps: Optional[int] = None) -> Tuple[int, dict]:
-    """Returns (num_cycles, stats)."""
-    ledger = ledger if ledger is not None else RoundLedger("ampc_1v2c")
-    n = g.n
-    rng = np.random.default_rng(seed)
-    with ledger.shuffle("WriteKV", nbytes_of(g.edges)):
-        nbr = jnp.asarray(cycle_adjacency(g))
-        sampled = rng.random(n) < p
-        # guarantee at least one sample (paper: w.h.p. argument)
-        if not sampled.any():
-            sampled[rng.integers(n)] = True
-        sampled = jnp.asarray(sampled)
-    ms = max_steps or int(min(n + 1, np.ceil(8 * np.log(max(n, 2)) / p)))
-    with ledger.shuffle("SampleWalk", int(np.asarray(sampled).sum()) * 4):
-        ncomp, steps, ok = _walk_and_count(nbr, sampled, ms)
-        ncomp = int(jax.device_get(ncomp))
-        total_steps = int(jax.device_get(steps))
-        ok = bool(jax.device_get(ok))
-    ledger.record_queries(total_steps, total_steps * 12, waves=1)
-    if not ok:
-        raise RuntimeError("walk budget exceeded; increase p or max_steps")
-    return ncomp, {"samples": int(np.asarray(jax.device_get(sampled)).sum()),
-                   "walk_steps": total_steps, "max_steps": ms}
-
-
 @jax.jit
 def _local_contraction_phase(a, b, parent, alive, rank):
     """One CC-LocalContraction phase: remove rank-local-minima, reconnect
@@ -147,35 +120,23 @@ def _local_contraction_phase(a, b, parent, alive, rank):
     return new_a, new_b, parent, alive, remaining
 
 
+def one_vs_two_ampc(g: UGraph, p: float = 1.0 / 64, seed: int = 0,
+                    ledger: Optional[RoundLedger] = None,
+                    max_steps: Optional[int] = None) -> Tuple[int, dict]:
+    """Deprecated shim over repro.ampc.solvers.one_vs_two_ampc."""
+    from ..ampc import solvers
+    from ..ampc.deprecation import warn_once
+    warn_once("repro.core.one_vs_two.one_vs_two_ampc",
+              'AmpcEngine().solve(g, "one-vs-two")')
+    return solvers.one_vs_two_ampc(g, p=p, seed=seed, ledger=ledger,
+                                   max_steps=max_steps)
+
+
 def one_vs_two_mpc(g: UGraph, seed: int = 0,
                    ledger: Optional[RoundLedger] = None) -> Tuple[int, dict]:
-    """CC-LocalContraction MPC baseline (Section 5.6): each phase removes the
-    rank-local-minima of every cycle and reconnects; 3 shuffles per phase,
-    O(log n) phases; the residual graph is finished in memory (the paper
-    switches to a single machine below 5e7 edges)."""
-    ledger = ledger if ledger is not None else RoundLedger("mpc_1v2c")
-    n = g.n
-    rng = np.random.default_rng(seed)
-    nbr = cycle_adjacency(g)
-    a = jnp.asarray(nbr[:, 0]); b = jnp.asarray(nbr[:, 1])
-    rank = jnp.asarray(rng.permutation(n).astype(np.float32))
-    parent = jnp.arange(n, dtype=jnp.int32)
-    alive = jnp.ones((n,), bool)
-    phases, remaining = 0, n
-    nb = nbytes_of(g.edges)
-    shrink = []
-    while remaining > 0 and phases < 200:
-        prev = remaining
-        with ledger.shuffle(f"lc_minima_{phases}", nb):
-            a, b, parent, alive, rem = _local_contraction_phase(
-                a, b, parent, alive, rank)
-        with ledger.shuffle(f"lc_reconnect_{phases}", nb):
-            remaining = int(jax.device_get(rem))
-        with ledger.shuffle(f"lc_relabel_{phases}", n * 4):
-            shrink.append(prev / max(remaining, 1))
-        phases += 1
-    # in-memory finish: pointer-jump parents to roots
-    from .msf import pointer_jump
-    roots, _ = pointer_jump(parent)
-    ncomp = int(len(np.unique(np.asarray(jax.device_get(roots)))))
-    return ncomp, {"phases": phases, "shrink_per_phase": shrink}
+    """Deprecated shim over repro.ampc.solvers.one_vs_two_mpc."""
+    from ..ampc import solvers
+    from ..ampc.deprecation import warn_once
+    warn_once("repro.core.one_vs_two.one_vs_two_mpc",
+              'AmpcEngine().solve(g, "one-vs-two-mpc")')
+    return solvers.one_vs_two_mpc(g, seed=seed, ledger=ledger)

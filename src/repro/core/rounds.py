@@ -29,6 +29,7 @@ class RoundLedger:
     dht_bytes: int = 0
     dht_query_waves: int = 0
     dedup_savings: int = 0  # queries avoided by the caching optimization
+    dht_overflows: int = 0  # routed-router capacity overflows (0 = exact)
     wall_time_s: float = 0.0
     phase_times: Dict[str, float] = dataclasses.field(default_factory=dict)
     events: List[str] = dataclasses.field(default_factory=list)
@@ -47,11 +48,12 @@ class RoundLedger:
 
     # -- DHT traffic -------------------------------------------------------
     def record_queries(self, n_queries: int, nbytes: int, waves: int = 1,
-                       deduped_away: int = 0):
+                       deduped_away: int = 0, overflow: int = 0):
         self.dht_queries += int(n_queries)
         self.dht_bytes += int(nbytes)
         self.dht_query_waves += int(waves)
         self.dedup_savings += int(deduped_away)
+        self.dht_overflows += int(overflow)
 
     def summary(self) -> Dict:
         return {
@@ -62,6 +64,7 @@ class RoundLedger:
             "dht_bytes": self.dht_bytes,
             "dht_query_waves": self.dht_query_waves,
             "dedup_savings": self.dedup_savings,
+            "dht_overflows": self.dht_overflows,
             "wall_time_s": round(self.wall_time_s, 4),
             "phase_times": {k: round(v, 4) for k, v in self.phase_times.items()},
         }

@@ -9,6 +9,11 @@
   * (1+ε)-approximate maximum CARDINALITY matching is obtained by the
     standard augmenting-path boosting over O(1/ε) rounds of maximal
     matchings (we provide the single-round 1/2-approx building block).
+
+Both functions are deprecated shims over ``repro.ampc.solvers``; the weight
+ranks are injected through the public ``mm_ampc(erank=...)`` parameter (no
+more inline-import monkey-wiring).  Prefer
+``AmpcEngine().solve(g, "weighted-matching")`` / ``.solve(g, "vertex-cover")``.
 """
 from __future__ import annotations
 
@@ -17,49 +22,26 @@ from typing import Optional, Tuple
 import numpy as np
 
 from ..graph.coo import UGraph
-from .matching import mm_ampc
 from .rounds import RoundLedger
 
 
 def mwm_greedy_ampc(g: UGraph, seed: int = 0,
                     ledger: Optional[RoundLedger] = None
                     ) -> Tuple[np.ndarray, dict]:
-    """1/2-approx maximum weight matching: greedy by decreasing weight
-    (ties broken by a random permutation), via the AMPC MM fixpoint.
-    Returns (in_matching bool(m,), stats)."""
-    assert g.weights is not None
-    rng = np.random.default_rng(seed)
-    tie = rng.permutation(g.m).astype(np.float64) / max(g.m, 1)
-    # rank: ascending = processed first => sort by decreasing weight
-    order = np.argsort(np.lexsort((tie, -g.weights.astype(np.float64))))
-    erank = order.astype(np.float32)
-
-    # run the fixpoint with our custom ranks by monkey-wiring through the
-    # same machinery mm_ampc uses (it draws ranks from `seed`; we instead
-    # call the fixpoint directly)
-    import jax
-    import jax.numpy as jnp
-    from .matching import _mm_fixpoint, IN
-    u = jnp.asarray(g.edges[:, 0]); v = jnp.asarray(g.edges[:, 1])
-    led = ledger if ledger is not None else RoundLedger("ampc_mwm")
-    with led.shuffle("SortEdgesByWeight+WriteKV", g.m * 12):
-        jrank = jnp.asarray(erank)
-    with led.shuffle("IsInMWM", g.m):
-        st, iters, q0, q1 = _mm_fixpoint(u, v, jrank, g.n,
-                                         jnp.zeros((g.m,), jnp.int32))
-        st = np.asarray(jax.device_get(st))
-    in_mm = st == IN
-    w = float(g.weights[in_mm].sum())
-    return in_mm, {"weight": w, "iters": int(jax.device_get(iters)),
-                   "erank": erank}
+    """Deprecated shim over repro.ampc.solvers.mwm_greedy_ampc."""
+    from ..ampc import solvers
+    from ..ampc.deprecation import warn_once
+    warn_once("repro.core.weighted_matching.mwm_greedy_ampc",
+              'AmpcEngine().solve(g, "weighted-matching")')
+    return solvers.mwm_greedy_ampc(g, seed=seed, ledger=ledger)
 
 
 def vertex_cover_2approx(g: UGraph, seed: int = 0,
                          ledger: Optional[RoundLedger] = None
                          ) -> Tuple[np.ndarray, dict]:
-    """2-approx minimum vertex cover = endpoints of a maximal matching."""
-    in_mm, stats = mm_ampc(g, seed=seed, ledger=ledger)
-    cover = np.zeros(g.n, bool)
-    cover[g.edges[in_mm, 0]] = True
-    cover[g.edges[in_mm, 1]] = True
-    return cover, {"cover_size": int(cover.sum()), **stats}
+    """Deprecated shim over repro.ampc.solvers.vertex_cover_2approx."""
+    from ..ampc import solvers
+    from ..ampc.deprecation import warn_once
+    warn_once("repro.core.weighted_matching.vertex_cover_2approx",
+              'AmpcEngine().solve(g, "vertex-cover")')
+    return solvers.vertex_cover_2approx(g, seed=seed, ledger=ledger)

@@ -1,0 +1,41 @@
+"""Benchmark-drift smoke test: the registry dispatch path must stay green.
+
+Runs ``benchmarks.run --quick --only table3_rounds`` (on the smallest graph
+in the suite) through the same registry lookup the CLI uses and fails if
+any benchmark returns ``{"error": ...}`` — so a signature drift between the
+engine/registry and the benchmark modules is caught by tier-1 pytest
+instead of at paper-reproduction time.
+"""
+import os
+import sys
+
+import pytest
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+
+def test_benchmark_registry_lists_all_benches():
+    from benchmarks import registry
+    names = registry.names()
+    for expected in ("table3_rounds", "bytes_comm", "mis_caching",
+                     "runtimes", "msf_queries", "gnn_dht_hillclimb",
+                     "roofline"):
+        assert expected in names, f"{expected} missing from registry"
+    spec = registry.get("table3_rounds")
+    assert spec.takes_graphs and spec.quick_kwargs.get("graph_names")
+
+
+def test_quick_table3_through_registry_dispatch():
+    """The acceptance gate: --quick --only table3_rounds must succeed."""
+    from benchmarks import run as bench_run
+    # er10 keeps the smoke run CPU-cheap; --graphs exercises the shared
+    # config path that overrides --quick's default subset
+    rc = bench_run.main(["--quick", "--only", "table3_rounds",
+                         "--graphs", "er10"])
+    assert rc == 0, "table3_rounds returned an error through the registry"
+
+
+def test_unknown_graph_rejected():
+    from benchmarks import run as bench_run
+    with pytest.raises(SystemExit):
+        bench_run.main(["--only", "table3_rounds", "--graphs", "nope"])
