@@ -42,7 +42,8 @@ def bench(name: str, *, takes_graphs: bool = False,
 def load_all():
     """Import every benchmark module so decorators run; returns REGISTRY."""
     from . import (table3_rounds, bytes_comm, mis_caching, runtimes,  # noqa
-                   msf_queries, gnn_dht_hillclimb, roofline)          # noqa
+                   msf_queries, solve_many, gnn_dht_hillclimb,        # noqa
+                   roofline)                                          # noqa
     return REGISTRY
 
 

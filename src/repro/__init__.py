@@ -1,0 +1,8 @@
+"""AMPC paper reproduction: parallel graph algorithms in constant adaptive
+rounds, on the JAX/Pallas stack.
+
+Top-level packages: ``repro.ampc`` (the engine API — start at
+``repro.ampc.AmpcEngine``), ``repro.core`` (jitted algorithm primitives and
+ledger accounting), ``repro.graph`` (containers, generators, batching).
+See the repository README for the full map.
+"""

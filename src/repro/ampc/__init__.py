@@ -4,17 +4,22 @@ One entry point for every algorithm the paper studies::
 
     from repro.ampc import AmpcEngine
     res = AmpcEngine(dht_backend="routed").solve(g, "msf")
+    results = AmpcEngine().solve_many(graphs, "mis")   # batched serving
 
-See README.md in this directory for the engine / registry / backend design
-and the deprecation path for the old per-module functions.
+See README.md in this directory for the engine / registry / backend design,
+the batched ``solve_many`` path + compiled-solver cache, and the
+deprecation path for the old per-module functions.
 """
 from .backends import DhtBackend, LocalDht, RoutedDht, resolve_backend
-from .engine import AmpcEngine, AmpcResult, SolveContext
-from .registry import ProblemSpec, get as get_problem, names as problem_names, \
-    problem, specs as problem_specs
+from .cache import CacheInfo, SolverCache
+from .engine import AmpcEngine, AmpcResult, BatchSolveContext, SolveContext
+from .registry import ProblemSpec, batched_impl, get as get_problem, \
+    names as problem_names, problem, specs as problem_specs
 
 __all__ = [
-    "AmpcEngine", "AmpcResult", "SolveContext",
+    "AmpcEngine", "AmpcResult", "SolveContext", "BatchSolveContext",
     "DhtBackend", "LocalDht", "RoutedDht", "resolve_backend",
-    "ProblemSpec", "problem", "get_problem", "problem_names", "problem_specs",
+    "CacheInfo", "SolverCache",
+    "ProblemSpec", "problem", "batched_impl", "get_problem", "problem_names",
+    "problem_specs",
 ]

@@ -12,7 +12,9 @@ both paths.
 
 Backends are stateless between solves: ``snapshot(values)`` binds a value
 array + ledger into a ``core.dht.ShardedDHT`` and every query goes through
-``ShardedDHT.lookup`` — the single accounting choke point.
+``ShardedDHT.lookup`` — the single accounting choke point.  ``lookup_many``
+is the batched (``solve_many``) variant: one materialized exchange serves a
+whole shape bucket, with per-graph query counts split by the padding mask.
 """
 from __future__ import annotations
 
@@ -22,6 +24,7 @@ import jax
 import jax.numpy as jnp
 
 from ..core.dht import ShardedDHT
+from ..core.rounds import RoundLedger
 
 
 @runtime_checkable
@@ -40,12 +43,67 @@ class DhtBackend(Protocol):
         """One-shot snapshot + query batch (convenience for single reads)."""
         ...
 
+    def lookup_many(self, values, keys, *, ledgers=None, key_mask=None,
+                    dedup: bool = False, value_bytes: Optional[int] = None):
+        """Batched snapshot read over a graph batch (see ``_BackendBase``)."""
+        ...
+
 
 class _BackendBase:
     def lookup(self, values, keys, *, ledger=None, dedup: bool = True,
                value_bytes: Optional[int] = None):
         return self.snapshot(values, ledger=ledger,
                              value_bytes=value_bytes).lookup(keys, dedup=dedup)
+
+    def lookup_many(self, values, keys, *, ledgers=None, key_mask=None,
+                    dedup: bool = False, value_bytes: Optional[int] = None):
+        """One materialized exchange serving a whole ``solve_many`` bucket.
+
+        ``values`` is (B, n, ...) — graph ``b``'s snapshot in row ``b`` —
+        and ``keys`` is (B, K) int32.  The batch is flattened into a single
+        keyspace (graph ``b``'s key ``k`` becomes ``b * n + k``) so both the
+        local gather and the routed all_to_all run **once** for the whole
+        bucket; graphs cannot alias each other's rows because their key
+        ranges are disjoint.
+
+        ``key_mask`` (B, K) marks the real queries: masked lanes become the
+        ``-1`` padding keys the DHT ignores.  When ``ledgers`` is given (one
+        ``RoundLedger`` per graph, batch order), each graph's ledger records
+        *its own* valid-query count and bytes — the per-graph split of the
+        batched exchange.  Router overflows are a property of the exchange
+        as a whole (any graph's answers may be inexact), so the total is
+        recorded on **every** participating ledger: per graph,
+        ``dht_overflows == 0`` still certifies exact answers.  Returns the
+        gathered (B, K, ...) array.
+        """
+        values = jnp.asarray(values)
+        keys = jnp.asarray(keys, jnp.int32)
+        B, n = values.shape[0], values.shape[1]
+        flat_vals = values.reshape((B * n,) + values.shape[2:])
+        offset = (jnp.arange(B, dtype=jnp.int32) * n)[:, None]
+        flat_keys = keys + offset
+        if key_mask is not None:
+            flat_keys = jnp.where(jnp.asarray(key_mask), flat_keys, -1)
+        # scratch ledger: captures the exchange's overflow count without
+        # double-recording the query totals we re-attribute per graph below
+        scratch = RoundLedger("lookup_many")
+        snap = self.snapshot(flat_vals, ledger=scratch,
+                             value_bytes=value_bytes)
+        out = snap.lookup(flat_keys.reshape(-1), dedup=dedup)
+        out = out.reshape((B, keys.shape[1]) + out.shape[1:])
+        if ledgers is not None:
+            if key_mask is None:
+                counts = [int(keys.shape[1])] * B
+            else:
+                counts = [int(c) for c in
+                          jnp.asarray(key_mask).sum(axis=1).tolist()]
+            row_bytes = value_bytes or snap._row_bytes
+            for ledger, cnt in zip(ledgers, counts):
+                if ledger is not None:
+                    ledger.record_queries(cnt, cnt * (row_bytes + 4),
+                                          waves=1,
+                                          overflow=scratch.dht_overflows)
+        return out
 
 
 class LocalDht(_BackendBase):

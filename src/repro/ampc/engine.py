@@ -13,26 +13,64 @@ the DHT backend (local gather vs routed all_to_all — pluggable, identical
 accounting), and the seed/epsilon defaults.  Problems are resolved through
 :mod:`repro.ampc.registry`, so a new algorithm becomes engine-callable by
 decorating its adapter with ``@problem(...)``.
+
+For serving many graphs per call, :meth:`AmpcEngine.solve_many` pads the
+fleet into power-of-two shape buckets and runs each bucket as one vmapped
+launch, memoizing the traced solver per ``(problem, backend, bucket)`` in
+an engine-level :class:`~repro.ampc.cache.SolverCache`
+(see :meth:`AmpcEngine.cache_info`).
 """
 from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Any, Dict, Optional
+from typing import Any, Dict, List, Optional, Sequence
+
+import numpy as np
 
 from ..core.rounds import RoundLedger
+from ..graph import batching
 from . import registry
 from .backends import DhtBackend, resolve_backend
+from .cache import CacheInfo, SolverCache
 
 
-@dataclasses.dataclass
+def _field_eq(a, b) -> bool:
+    """Equality that tolerates numpy arrays nested in outputs/stats."""
+    if isinstance(a, np.ndarray) or isinstance(b, np.ndarray):
+        return np.array_equal(a, b)
+    if isinstance(a, dict) and isinstance(b, dict):
+        return a.keys() == b.keys() and \
+            all(_field_eq(a[k], b[k]) for k in a)
+    if isinstance(a, (list, tuple)) and isinstance(b, (list, tuple)):
+        return len(a) == len(b) and \
+            all(_field_eq(x, y) for x, y in zip(a, b))
+    return a == b
+
+
+@dataclasses.dataclass(eq=False)
 class AmpcResult:
-    """Uniform result of ``AmpcEngine.solve``.
+    """Uniform result of ``AmpcEngine.solve`` / ``AmpcEngine.solve_many``.
 
     ``output`` follows the problem's declared kind: ``vertex_mask`` (bool
     (n,)), ``edge_mask`` (bool (m,)), ``labels`` (int (n,)), or ``count``
     (int).  ``ledger`` is the ``RoundLedger.summary()`` dict —
     ``ledger["shuffles"]`` is the paper's Table-3 round count.
+
+    ``raw_ledger`` keeps the live ledger for phase-time inspection; it is
+    excluded from equality (``compare=False``), and ``__eq__`` compares the
+    remaining fields with array-aware semantics, so results holding numpy
+    outputs compare cleanly instead of raising.
+
+    >>> from repro.ampc import AmpcEngine
+    >>> from repro.graph import generators as gen
+    >>> res = AmpcEngine(seed=0).solve(gen.erdos_renyi(64, 3.0, seed=1), "mis")
+    >>> res.problem, res.model, res.backend
+    ('mis', 'ampc', 'local')
+    >>> res.shuffles == res.ledger["shuffles"] == 2
+    True
+    >>> bool(res.output.any())
+    True
     """
 
     problem: str
@@ -42,11 +80,18 @@ class AmpcResult:
     stats: Dict[str, Any]
     ledger: Dict[str, Any]
     wall_time_s: float
-    raw_ledger: RoundLedger = dataclasses.field(repr=False, default=None)
+    raw_ledger: Optional[RoundLedger] = dataclasses.field(
+        repr=False, compare=False, default=None)
 
     @property
     def shuffles(self) -> int:
         return self.ledger["shuffles"]
+
+    def __eq__(self, other):
+        if not isinstance(other, AmpcResult):
+            return NotImplemented
+        return all(_field_eq(getattr(self, f.name), getattr(other, f.name))
+                   for f in dataclasses.fields(self) if f.compare)
 
     def __repr__(self):
         return (f"AmpcResult(problem={self.problem!r}, model={self.model!r}, "
@@ -66,6 +111,32 @@ class SolveContext:
     mesh: Any = None
 
 
+@dataclasses.dataclass
+class BatchSolveContext:
+    """Cross-cutting state handed to a batch adapter for one bucket launch.
+
+    ``ledgers`` holds one ``RoundLedger`` per graph in the batch (batch
+    order): the single physical launch is attributed per graph — each ledger
+    records the bucket's shuffle structure with that graph's own bytes and
+    its own share of the DHT query counts (split by mask).
+    """
+
+    ledgers: List[RoundLedger]
+    dht: DhtBackend
+    seed: int
+    epsilon: float
+    cache: SolverCache
+    problem: str = ""
+    backend_name: str = ""
+    mesh: Any = None
+
+    def solver_key(self, batch, *extra):
+        """Cache key for this bucket's compiled solver.  ``extra`` captures
+        options that change the traced program (e.g. a static walk budget)."""
+        return (self.problem, self.backend_name,
+                batch.n_bucket, batch.m_bucket, *extra)
+
+
 class AmpcEngine:
     """Session object for AMPC graph solves.
 
@@ -76,6 +147,19 @@ class AmpcEngine:
     dht_backend:  ``"local"`` | ``"routed"`` | a ``DhtBackend`` instance.
     epsilon:      the paper's space exponent (per-machine space n^ε).
     seed:         default randomness for rank permutations / sampling.
+
+    >>> from repro.ampc import AmpcEngine
+    >>> from repro.graph import generators as gen
+    >>> eng = AmpcEngine(dht_backend="local", epsilon=0.5, seed=0)
+    >>> fleet = [gen.erdos_renyi(48, 3.0, seed=s) for s in range(3)]
+    >>> results = eng.solve_many(fleet, "mis")
+    >>> [r.problem for r in results]
+    ['mis', 'mis', 'mis']
+    >>> sequential = eng.solve(fleet[0], "mis")
+    >>> bool((results[0].output == sequential.output).all())
+    True
+    >>> eng.cache_info().misses >= 1
+    True
     """
 
     def __init__(self, mesh=None, dht_backend="local", epsilon: float = 0.5,
@@ -84,6 +168,18 @@ class AmpcEngine:
         self.dht = resolve_backend(dht_backend, mesh=mesh)
         self.epsilon = float(epsilon)
         self.seed = int(seed)
+        self._solver_cache = SolverCache()
+
+    # ------------------------------------------------------------------
+    def _validate(self, spec, graph) -> None:
+        if spec.needs_weights and getattr(graph, "weights", None) is None:
+            raise ValueError(
+                f"problem {spec.name!r} needs edge weights; call "
+                "g.with_random_weights()/g.with_degree_weights() first")
+        if spec.needs_cycles and not (graph.degrees() == 2).all():
+            raise ValueError(
+                f"problem {spec.name!r} needs a disjoint union of cycles "
+                "(every vertex must have degree 2)")
 
     # ------------------------------------------------------------------
     def solve(self, graph, problem: str, *, seed: Optional[int] = None,
@@ -96,14 +192,7 @@ class AmpcEngine:
         this solve only.
         """
         spec = registry.get(problem)
-        if spec.needs_weights and getattr(graph, "weights", None) is None:
-            raise ValueError(
-                f"problem {spec.name!r} needs edge weights; call "
-                "g.with_random_weights()/g.with_degree_weights() first")
-        if spec.needs_cycles and not (graph.degrees() == 2).all():
-            raise ValueError(
-                f"problem {spec.name!r} needs a disjoint union of cycles "
-                "(every vertex must have degree 2)")
+        self._validate(spec, graph)
         ledger = RoundLedger(f"{spec.model}_{spec.name}")
         ctx = SolveContext(
             ledger=ledger, dht=self.dht,
@@ -117,6 +206,76 @@ class AmpcEngine:
                           backend=self.dht.name, output=output, stats=stats,
                           ledger=ledger.summary(), wall_time_s=wall,
                           raw_ledger=ledger)
+
+    # ------------------------------------------------------------------
+    def solve_many(self, graphs: Sequence[Any], problem: str, *,
+                   seed: Optional[int] = None,
+                   epsilon: Optional[float] = None,
+                   **opts) -> List[AmpcResult]:
+        """Solve ``problem`` on a fleet of graphs, one result per graph.
+
+        Graphs are padded into power-of-two ``(n_bucket, m_bucket)`` shape
+        buckets (:mod:`repro.graph.batching`); each bucket runs as a single
+        vmapped/jitted launch whose traced solver is memoized in the
+        engine's :class:`SolverCache`, so repeated traffic on same-sized
+        graphs skips tracing entirely.  Outputs are unpadded back to
+        per-graph ``AmpcResult`` objects identical to sequential ``solve``
+        outputs; ``wall_time_s`` is the bucket launch amortized over its
+        occupants.
+
+        Problems without a registered batch adapter (see
+        ``src/repro/ampc/README.md`` for the list) fall back to sequential
+        ``solve`` calls — same results, no batching speedup.
+        """
+        graphs = list(graphs)
+        spec = registry.get(problem)
+        for g in graphs:
+            self._validate(spec, g)
+        if spec.batch_fn is None:
+            return [self.solve(g, problem, seed=seed, epsilon=epsilon, **opts)
+                    for g in graphs]
+        results: List[Optional[AmpcResult]] = [None] * len(graphs)
+        for batch in batching.bucketize(graphs).values():
+            ledgers = [RoundLedger(f"{spec.model}_{spec.name}")
+                       for _ in range(len(batch))]
+            bctx = BatchSolveContext(
+                ledgers=ledgers, dht=self.dht,
+                seed=self.seed if seed is None else int(seed),
+                epsilon=self.epsilon if epsilon is None else float(epsilon),
+                cache=self._solver_cache, problem=spec.name,
+                backend_name=self.dht.name, mesh=self.mesh)
+            t0 = time.perf_counter()
+            outs = spec.batch_fn(bctx, batch, **opts)
+            wall = time.perf_counter() - t0
+            assert len(outs) == len(batch), \
+                f"batch adapter for {spec.name!r} returned {len(outs)} " \
+                f"results for {len(batch)} graphs"
+            per_graph_wall = wall / max(len(batch), 1)
+            for slot, (idx, (output, stats)) in enumerate(
+                    zip(batch.indices, outs)):
+                stats.setdefault("batch", {
+                    "bucket": batch.key, "batch_size": len(batch),
+                    "slot": slot})
+                results[idx] = AmpcResult(
+                    problem=spec.name, model=spec.model,
+                    backend=self.dht.name, output=output, stats=stats,
+                    ledger=ledgers[slot].summary(),
+                    wall_time_s=per_graph_wall, raw_ledger=ledgers[slot])
+        return results
+
+    # ------------------------------------------------------------------
+    def cache_info(self) -> CacheInfo:
+        """Hit/miss/size counters of the compiled-solver cache.
+
+        One miss per solver actually traced; one hit per graph served by an
+        already-traced solver (so a cold bucket of ``B`` graphs counts
+        ``1`` miss and ``B - 1`` hits).
+        """
+        return self._solver_cache.info()
+
+    def clear_cache(self) -> None:
+        """Drop every memoized solver and reset the hit/miss counters."""
+        self._solver_cache.clear()
 
     # ------------------------------------------------------------------
     def problems(self, model: Optional[str] = None):

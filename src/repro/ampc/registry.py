@@ -6,6 +6,11 @@ without per-algorithm special cases.  Registered functions take
 ``fn(ctx, graph, **opts)`` where ``ctx`` is an ``engine.SolveContext``
 carrying the ledger, the DHT backend, and the engine's seed/epsilon — the
 things every pre-engine call site used to thread by hand.
+
+A problem may additionally carry a *batch adapter* (``@batched_impl``)
+with signature ``fn(bctx, batch, **opts)``; ``AmpcEngine.solve_many``
+dispatches to it per shape bucket and falls back to sequential ``solve``
+calls when it is absent.
 """
 from __future__ import annotations
 
@@ -26,6 +31,10 @@ class ProblemSpec:
     # Table 3: expected shuffle count on the default (sparse) path, or None
     # when the count is input-dependent (MPC baselines, level variants).
     table3_shuffles: Optional[int] = None
+    # Batch-safe adapter for AmpcEngine.solve_many:
+    # fn(bctx, batch, **opts) -> [(output, stats), ...] aligned with
+    # batch.graphs.  None => solve_many falls back to sequential solves.
+    batch_fn: Optional[Callable] = None
 
 
 PROBLEMS: Dict[str, ProblemSpec] = {}
@@ -57,6 +66,29 @@ def problem(name: str, *, model: str, output: str, needs_weights: bool = False,
         PROBLEMS[name] = spec
         for a in aliases:
             _ALIASES[a] = name
+        return fn
+
+    return deco
+
+
+def batched_impl(name: str):
+    """Attach a batch-safe ``solve_many`` adapter to a registered problem.
+
+    The adapter receives ``(bctx, batch, **opts)`` — an
+    ``engine.BatchSolveContext`` and a ``graph.batching.GraphBatch`` — and
+    returns one ``(output, stats)`` pair per graph in the batch, in batch
+    order.  Problems without an adapter fall back to sequential ``solve``
+    calls inside ``solve_many``.
+    """
+
+    def deco(fn):
+        key = _ALIASES.get(name, name)
+        if key not in PROBLEMS:
+            raise KeyError(f"cannot attach batch adapter: unknown problem "
+                           f"{name!r}")
+        if PROBLEMS[key].batch_fn is not None:
+            raise ValueError(f"duplicate batch adapter for {key!r}")
+        PROBLEMS[key] = dataclasses.replace(PROBLEMS[key], batch_fn=fn)
         return fn
 
     return deco

@@ -11,7 +11,11 @@ Every driver that used to live at module level in ``core.mis`` /
     ``ledger``, and — for AMPC solvers with array outputs — an optional
     ``dht`` backend for the final CollectOutputs snapshot read);
   * each driver is registered with :mod:`repro.ampc.registry` so
-    ``AmpcEngine.solve(graph, "<problem>")`` reaches it uniformly.
+    ``AmpcEngine.solve(graph, "<problem>")`` reaches it uniformly;
+  * batch-safe problems additionally register a ``@batched_impl`` adapter
+    (bottom of this module) that runs one vmapped launch per
+    ``solve_many`` shape bucket with outputs identical to the sequential
+    driver.
 
 The old ``core`` module functions remain as thin deprecated shims that
 delegate here, so pre-engine call sites keep working unchanged.
@@ -26,6 +30,7 @@ collect-read traffic itself.
 from __future__ import annotations
 
 import functools
+import time
 from typing import Optional, Tuple
 
 import jax
@@ -35,15 +40,16 @@ import numpy as np
 from ..graph.coo import UGraph
 from ..core.rounds import RoundLedger, nbytes_of
 from ..core.ternarize import ternarize
-from ..core.mis import _mis_fixpoint, IN, OUT, UNKNOWN
+from ..core.mis import _mis_fixpoint, _mis_fixpoint_masked, IN, OUT, UNKNOWN
 from ..core.matching import _mm_fixpoint, _mm_wave, BIGF
 from ..core.msf import (truncated_prim, pointer_jump, contract_edges,
                         boruvka_inround, _mpc_boruvka_phase)
-from ..core.connectivity import _canonicalize, _h2m_phase
+from ..core.connectivity import (_canonicalize, _cc_fixpoint_masked,
+                                 _h2m_phase)
 from ..core.one_vs_two import cycle_adjacency, _walk_and_count, \
-    _local_contraction_phase
+    _walk_and_count_batch, _local_contraction_phase
 from . import registry
-from .registry import problem
+from .registry import batched_impl, problem
 
 
 def _collect(dht, ledger, values, keys=None, dedup: bool = False):
@@ -716,3 +722,294 @@ def _p_1v2(ctx, g, **opts):
          summary="CC-LocalContraction MPC baseline, 3 shuffles/phase")
 def _p_1v2_mpc(ctx, g, **opts):
     return one_vs_two_mpc(g, seed=ctx.seed, ledger=ctx.ledger, **opts)
+
+
+# ==========================================================================
+# Batched adapters — AmpcEngine.solve_many, one vmapped launch per bucket
+# ==========================================================================
+# Each adapter takes (bctx: engine.BatchSolveContext, batch: GraphBatch) and
+# returns one (output, stats) per graph, in batch order.  Invariants:
+#
+#   * outputs are bit-identical to sequential ``solve`` on the same engine
+#     seed: each lane pads with inert edges/vertices and uses the graph's
+#     *own* (unpadded) rank permutation, so the fixpoint trajectory over the
+#     real vertices/edges is exactly the sequential one;
+#   * the traced solver is memoized per (problem, backend, bucket) through
+#     ``bctx.cache``; all graphs after the first occupant of a bucket ride
+#     the same compiled program (stats["solver_cache"]);
+#   * per-graph ledgers mirror the sequential shuffle structure, with this
+#     graph's own bytes and its mask's share of the batched DHT traffic.
+
+
+def _cache_stat(key, hit: bool, slot: int) -> dict:
+    # slot 0 of a cold bucket pays the trace; every later occupant is a hit
+    return {"key": key, "hit": bool(hit or slot > 0)}
+
+
+def _per_graph_ranks(batch, seed: int):
+    """Per-graph vertex rank permutations, padded to n_bucket.
+
+    Each graph draws from ``default_rng(seed)`` exactly like the sequential
+    solver; padding vertices get ranks above every real rank (they are
+    isolated, so the value never matters)."""
+    B, nb = len(batch), batch.n_bucket
+    ranks = np.zeros((B, nb), np.float32)
+    for b, g in enumerate(batch.graphs):
+        rng = np.random.default_rng(seed)
+        ranks[b, :g.n] = rng.permutation(g.n).astype(np.float32)
+        ranks[b, g.n:] = np.arange(g.n, nb, dtype=np.float32)
+    return ranks
+
+
+def _build_mis_solver(n: int):
+    return jax.jit(jax.vmap(
+        lambda s, r, rank, ok: _mis_fixpoint_masked(s, r, rank, n, ok)))
+
+
+@batched_impl("mis")
+def mis_ampc_batched(bctx, batch, caching: bool = True):
+    """Batched MIS: one masked-fixpoint launch over the whole bucket."""
+    B, nb = len(batch), batch.n_bucket
+    senders, receivers, edge_ok = batch.padded_symmetric()
+    ranks = _per_graph_ranks(batch, bctx.seed)
+    for b, g in enumerate(batch.graphs):
+        bctx.ledgers[b].record_shuffle("DirectEdges+WriteKV",
+                                       nbytes_of(g.edges) * 2)
+    key = bctx.solver_key(batch)
+    solver, hit = bctx.cache.get_or_build(
+        key, lambda: _build_mis_solver(nb), occupants=B)
+    t0 = time.perf_counter()
+    status_b, iters_b, q0_b, q1_b = solver(
+        jnp.asarray(senders), jnp.asarray(receivers), jnp.asarray(ranks),
+        jnp.asarray(edge_ok))
+    # CollectOutputs: one batched DHT read, per-graph queries split by mask
+    keys = np.broadcast_to(np.arange(nb, dtype=np.int32), (B, nb))
+    out_b = bctx.dht.lookup_many(status_b, keys, ledgers=bctx.ledgers,
+                                 key_mask=batch.node_mask)
+    status_h = np.asarray(jax.device_get(out_b))
+    dt = time.perf_counter() - t0
+    iters = np.asarray(jax.device_get(iters_b))
+    q0 = np.asarray(jax.device_get(q0_b))
+    q1 = np.asarray(jax.device_get(q1_b))
+    outs = []
+    for b, g in enumerate(batch.graphs):
+        led = bctx.ledgers[b]
+        led.record_shuffle("IsInMIS", g.n * 4, seconds=dt / B)
+        qn, qd, it = int(q0[b]), int(q1[b]), int(iters[b])
+        queries = qd if caching else qn
+        led.record_queries(queries, queries * 8, waves=it,
+                           deduped_away=(qn - qd) if caching else 0)
+        status = status_h[b, :g.n]
+        assert not (status == UNKNOWN).any()
+        outs.append((status == IN,
+                     {"fixpoint_iters": it, "queries_nodedup": qn,
+                      "queries_dedup": qd,
+                      "cache_savings_factor": qn / max(qd, 1),
+                      "solver_cache": _cache_stat(key, hit, b)}))
+    return outs
+
+
+def _build_mm_solver(n: int):
+    return jax.jit(jax.vmap(
+        lambda u, v, rank, st0: _mm_fixpoint(u, v, rank, n, st0)))
+
+
+def _mm_batched_launch(bctx, batch, eranks, caching: bool = True):
+    """Shared batched greedy-MM launch (matching / mwm / vertex-cover).
+
+    ``eranks`` is one unpadded rank array per graph (the Corollary-4.1
+    injection point); padding edges start OUT so they never join or block.
+    The compiled fixpoint is shared across every problem that rides it —
+    the cache key is scoped to ``"matching"``, not the caller's name.
+    """
+    B, nb, mb = len(batch), batch.n_bucket, batch.m_bucket
+    u = batch.edges[:, :, 0]
+    v = batch.edges[:, :, 1]
+    ranks = np.full((B, mb), np.inf, np.float32)
+    for b, er in enumerate(eranks):
+        ranks[b, :er.shape[0]] = er
+    estatus0 = np.where(batch.edge_mask, np.int32(UNKNOWN),
+                        np.int32(OUT)).astype(np.int32)
+    for b, g in enumerate(batch.graphs):
+        bctx.ledgers[b].record_shuffle("SortEdges+WriteKV",
+                                       nbytes_of(g.edges) * 2)
+    key = ("matching", bctx.backend_name, nb, mb)
+    solver, hit = bctx.cache.get_or_build(
+        key, lambda: _build_mm_solver(nb), occupants=B)
+    t0 = time.perf_counter()
+    estatus_b, iters_b, q0_b, q1_b = solver(
+        jnp.asarray(u), jnp.asarray(v), jnp.asarray(ranks),
+        jnp.asarray(estatus0))
+    keys = np.broadcast_to(np.arange(mb, dtype=np.int32), (B, mb))
+    out_b = bctx.dht.lookup_many(estatus_b, keys, ledgers=bctx.ledgers,
+                                 key_mask=batch.edge_mask)
+    estatus_h = np.asarray(jax.device_get(out_b))
+    dt = time.perf_counter() - t0
+    iters = np.asarray(jax.device_get(iters_b))
+    q0 = np.asarray(jax.device_get(q0_b))
+    q1 = np.asarray(jax.device_get(q1_b))
+    outs = []
+    for b, g in enumerate(batch.graphs):
+        led = bctx.ledgers[b]
+        led.record_shuffle("IsInMM", g.m, seconds=dt / B)
+        qn, qd, it = int(q0[b]), int(q1[b]), int(iters[b])
+        queries = qd if caching else qn
+        led.record_queries(queries, queries * 12, waves=it,
+                           deduped_away=(qn - qd) if caching else 0)
+        estatus = estatus_h[b, :g.m]
+        outs.append((estatus == IN,
+                     {"fixpoint_iters": it, "queries_nodedup": qn,
+                      "queries_dedup": qd, "erank": eranks[b],
+                      "solver_cache": _cache_stat(key, hit, b)}))
+    return outs
+
+
+@batched_impl("matching")
+def mm_ampc_batched(bctx, batch, caching: bool = True):
+    """Batched greedy maximal matching over per-graph random edge ranks."""
+    eranks = []
+    for g in batch.graphs:
+        rng = np.random.default_rng(bctx.seed)
+        eranks.append(rng.permutation(g.m).astype(np.float32))
+    return _mm_batched_launch(bctx, batch, eranks, caching=caching)
+
+
+@batched_impl("weighted-matching")
+def mwm_greedy_ampc_batched(bctx, batch, caching: bool = True):
+    """Batched 1/2-approx MWM: decreasing-weight eranks into the MM launch."""
+    eranks = []
+    for g in batch.graphs:
+        rng = np.random.default_rng(bctx.seed)
+        tie = rng.permutation(g.m).astype(np.float64) / max(g.m, 1)
+        order = np.argsort(np.lexsort((tie, -g.weights.astype(np.float64))))
+        eranks.append(order.astype(np.float32))
+    outs = _mm_batched_launch(bctx, batch, eranks, caching=caching)
+    return [(in_mm, {"weight": float(g.weights[in_mm].sum()), **st})
+            for g, (in_mm, st) in zip(batch.graphs, outs)]
+
+
+@batched_impl("vertex-cover")
+def vertex_cover_2approx_batched(bctx, batch, caching: bool = True):
+    """Batched 2-approx vertex cover: endpoints of the batched MM."""
+    outs = mm_ampc_batched(bctx, batch, caching=caching)
+    results = []
+    for g, (in_mm, st) in zip(batch.graphs, outs):
+        cover = np.zeros(g.n, bool)
+        cover[g.edges[in_mm, 0]] = True
+        cover[g.edges[in_mm, 1]] = True
+        results.append((cover, {"cover_size": int(cover.sum()), **st}))
+    return results
+
+
+def _build_cc_solver(n: int):
+    return jax.jit(jax.vmap(
+        lambda u, v, ok: _cc_fixpoint_masked(u, v, ok, n)))
+
+
+@batched_impl("connectivity")
+def cc_ampc_batched(bctx, batch):
+    """Batched connectivity via in-round min-label doubling (2 shuffles).
+
+    The sequential solver runs the paper's 5-shuffle truncated-Prim
+    pipeline; that pipeline's per-graph ternarized shapes do not bucket, so
+    the batched path instead resolves labels by masked hash-to-min run to
+    fixpoint against one snapshot.  Outputs are identical after
+    canonicalization (component labels are min-vertex-id in both paths);
+    the ledger reflects the 2-shuffle batched pipeline.
+    """
+    B, nb = len(batch), batch.n_bucket
+    u = batch.edges[:, :, 0]
+    v = batch.edges[:, :, 1]
+    for b, g in enumerate(batch.graphs):
+        bctx.ledgers[b].record_shuffle("SortGraph+WriteKV",
+                                       nbytes_of(g.edges))
+    key = bctx.solver_key(batch)
+    solver, hit = bctx.cache.get_or_build(
+        key, lambda: _build_cc_solver(nb), occupants=B)
+    t0 = time.perf_counter()
+    labels_b, iters_b, q0_b, q1_b = solver(
+        jnp.asarray(u), jnp.asarray(v), jnp.asarray(batch.edge_mask))
+    keys = np.broadcast_to(np.arange(nb, dtype=np.int32), (B, nb))
+    out_b = bctx.dht.lookup_many(labels_b, keys, ledgers=bctx.ledgers,
+                                 key_mask=batch.node_mask)
+    labels_h = np.asarray(jax.device_get(out_b))
+    dt = time.perf_counter() - t0
+    iters = np.asarray(jax.device_get(iters_b))
+    q0 = np.asarray(jax.device_get(q0_b))
+    q1 = np.asarray(jax.device_get(q1_b))
+    outs = []
+    for b, g in enumerate(batch.graphs):
+        led = bctx.ledgers[b]
+        led.record_shuffle("LabelFixpoint", g.n * 4, seconds=dt / B)
+        qn, qd, it = int(q0[b]), int(q1[b]), int(iters[b])
+        led.record_queries(qd, qd * 8, waves=it, deduped_away=qn - qd)
+        labels = _canonicalize(labels_h[b, :g.n].astype(np.int64))
+        outs.append((labels,
+                     {"label_prop_iters": it, "queries": qd,
+                      "queries_nodedup": qn,
+                      "num_components": int(len(np.unique(labels))),
+                      "solver_cache": _cache_stat(key, hit, b)}))
+    return outs
+
+
+def _build_1v2_solver(n: int, max_steps: int):
+    return jax.jit(
+        lambda nbr, sampled: _walk_and_count_batch(nbr, sampled, max_steps, n))
+
+
+@batched_impl("one-vs-two")
+def one_vs_two_ampc_batched(bctx, batch, p: float = 1.0 / 64,
+                            max_steps: Optional[int] = None):
+    """Batched 1-vs-2-cycle: one vmapped walk launch per bucket.
+
+    Padding vertices self-loop and are marked sampled, so each contributes
+    exactly 2 walk steps and 1 component — both subtracted per graph.  The
+    static walk budget is the bucket maximum of the per-graph budgets (it
+    only bounds the in-round chase; successful walks stop at the next
+    sample regardless), and is part of the solver cache key.
+    """
+    B, nb = len(batch), batch.n_bucket
+    nbrs = np.zeros((B, nb, 2), np.int32)
+    sampled = np.zeros((B, nb), bool)
+    n_samples = np.zeros(B, np.int64)
+    ms = 1
+    for b, g in enumerate(batch.graphs):
+        nbrs[b, :g.n] = cycle_adjacency(g)
+        pads = np.arange(g.n, nb, dtype=np.int32)
+        nbrs[b, g.n:, 0] = pads
+        nbrs[b, g.n:, 1] = pads
+        rng = np.random.default_rng(bctx.seed)
+        s = rng.random(g.n) < p
+        if not s.any():
+            s[rng.integers(g.n)] = True
+        sampled[b, :g.n] = s
+        sampled[b, g.n:] = True
+        n_samples[b] = int(s.sum())
+        ms = max(ms, max_steps or
+                 int(min(g.n + 1, np.ceil(8 * np.log(max(g.n, 2)) / p))))
+        bctx.ledgers[b].record_shuffle("WriteKV", nbytes_of(g.edges))
+    key = bctx.solver_key(batch, ("max_steps", ms))
+    solver, hit = bctx.cache.get_or_build(
+        key, lambda: _build_1v2_solver(nb, ms), occupants=B)
+    t0 = time.perf_counter()
+    ncomp_b, steps_b, ok_b = solver(jnp.asarray(nbrs), jnp.asarray(sampled))
+    ncomp = np.asarray(jax.device_get(ncomp_b))
+    steps = np.asarray(jax.device_get(steps_b))
+    ok = np.asarray(jax.device_get(ok_b))
+    dt = time.perf_counter() - t0
+    outs = []
+    for b, g in enumerate(batch.graphs):
+        if not bool(ok[b]):
+            raise RuntimeError("walk budget exceeded; increase p or "
+                               f"max_steps (graph {batch.indices[b]})")
+        n_pad = nb - g.n
+        real_steps = int(steps[b]) - 2 * n_pad
+        led = bctx.ledgers[b]
+        led.record_shuffle("SampleWalk", int(n_samples[b]) * 4,
+                           seconds=dt / B)
+        led.record_queries(real_steps, real_steps * 12, waves=1)
+        outs.append((int(ncomp[b]) - n_pad,
+                     {"samples": int(n_samples[b]),
+                      "walk_steps": real_steps, "max_steps": ms,
+                      "solver_cache": _cache_stat(key, hit, b)}))
+    return outs

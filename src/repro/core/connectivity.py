@@ -11,6 +11,7 @@ materialized launch per phase (the CC-LocalContraction stand-in used for the
 """
 from __future__ import annotations
 
+import functools
 from typing import Optional, Tuple
 
 import jax
@@ -47,6 +48,64 @@ def _h2m_phase(u, v, labels):
     new = jnp.take(new, new)   # shortcut
     changed = jnp.any(new != labels)
     return new, changed
+
+
+# --------------------------------------------------------------------------
+# Batched-solve core: masked min-label propagation run to fixpoint in-round
+# --------------------------------------------------------------------------
+@functools.partial(jax.jit, static_argnames=("n",))
+def _cc_fixpoint_masked(u, v, edge_ok, n: int):
+    """Connected-component labels by in-round min-label doubling.
+
+    The vmappable core behind the batched ``solve_many`` connectivity path:
+    all hash-to-min phases run against the same immutable snapshot inside
+    one ``while_loop`` (AMPC adaptivity), instead of the 5-shuffle truncated
+    Prim pipeline of the sequential solver.  ``edge_ok`` masks the padding
+    lanes of a shape bucket; padding vertices keep their own ids and are
+    sliced away by the caller.  Labels are constant per component at the
+    fixpoint (callers canonicalize), so the final output matches the
+    sequential solver's exactly after ``_canonicalize``.
+
+    Returns (labels(n,) int32, iters, queries_nodedup, queries_dedup).
+    Query model: each phase, every live edge reads both endpoint labels from
+    the snapshot (no-dedup count); with per-machine caching each distinct
+    endpoint is fetched once per wave.
+    """
+    labels0 = jnp.arange(n, dtype=jnp.int32)
+    su = jnp.where(edge_ok, u, n)
+    sv = jnp.where(edge_ok, v, n)
+    scanned_per_wave = 2 * edge_ok.sum()
+    probe = jnp.zeros((n,), jnp.int32)
+    probe = probe.at[su].set(1, mode="drop")
+    probe = probe.at[sv].set(1, mode="drop")
+    distinct_per_wave = probe.sum()
+
+    def cond(s):
+        labels, it, q0, q1, changed = s
+        return changed
+
+    def body(s):
+        labels, it, q0, q1, live = s
+        lu, lv = labels[u], labels[v]
+        mn = jnp.minimum(lu, lv)
+        new = labels
+        new = new.at[su].min(mn, mode="drop")
+        new = new.at[sv].min(mn, mode="drop")
+        new = new.at[jnp.where(edge_ok, lu, n)].min(mn, mode="drop")
+        new = new.at[jnp.where(edge_ok, lv, n)].min(mn, mode="drop")
+        new = jnp.take(new, new)   # shortcut
+        changed = jnp.any(new != labels)
+        # gate counters on the lane being live: a converged lane of a
+        # vmapped solve_many bucket may still execute the body
+        inc = live.astype(jnp.int32)
+        return (new, it + inc, q0 + inc * scanned_per_wave,
+                q1 + inc * distinct_per_wave, changed)
+
+    labels, iters, q0, q1, _ = jax.lax.while_loop(
+        cond, body,
+        (labels0, jnp.int32(0), jnp.int32(0), jnp.int32(0),
+         jnp.asarray(True)))
+    return labels, iters, q0, q1
 
 
 def cc_ampc(g: UGraph, epsilon: float = 0.5, seed: int = 0,

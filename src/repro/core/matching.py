@@ -85,7 +85,10 @@ def _mm_fixpoint(u, v, erank, n: int, estatus0):
         probe = jnp.zeros((n,), jnp.int32)
         probe = probe.at[jnp.where(unk, u, n)].set(1, mode="drop")
         probe = probe.at[jnp.where(unk, v, n)].set(1, mode="drop")
-        return new, it + 1, q0 + scanned, q1 + probe.sum()
+        # gate the wave counter on live work so per-lane counts stay exact
+        # when this fixpoint runs as one lane of a vmapped solve_many bucket
+        live = unk.any().astype(jnp.int32)
+        return new, it + live, q0 + scanned, q1 + probe.sum()
 
     estatus, iters, q0, q1 = jax.lax.while_loop(
         cond, body, (estatus0, jnp.int32(0), jnp.int32(0), jnp.int32(0)))

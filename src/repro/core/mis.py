@@ -33,8 +33,14 @@ UNKNOWN, IN, OUT = 0, 1, 2
 
 
 @functools.partial(jax.jit, static_argnames=("n",))
-def _mis_fixpoint(senders, receivers, rank, n: int):
-    """Run the LFMIS fixpoint to completion inside one program.
+def _mis_fixpoint_masked(senders, receivers, rank, n: int, edge_ok):
+    """LFMIS fixpoint with an edge-validity mask (the batched-solve core).
+
+    ``edge_ok`` marks the real directed edges; masked lanes (the padding a
+    ``solve_many`` shape bucket introduces) never contribute to blocking,
+    joining, or query counts, so each batch lane reproduces exactly the
+    trajectory of the unpadded sequential fixpoint.  Padding vertices have
+    no valid edges and resolve to IN on the first wave.
 
     Returns (status(n,), iters, queries_nodedup, queries_dedup).
     Query accounting per wave: every undecided vertex fetches the status of
@@ -42,7 +48,6 @@ def _mis_fixpoint(senders, receivers, rank, n: int):
     neighbour is fetched once per machine — we model the per-wave dedup as
     one fetch per distinct queried vertex (paper Section 5.3).
     """
-    E = senders.shape[0]
     status0 = jnp.zeros((n,), jnp.int32)
 
     def cond(s):
@@ -51,7 +56,7 @@ def _mis_fixpoint(senders, receivers, rank, n: int):
 
     def body(s):
         status, it, q0, q1 = s
-        s_unk = status[senders] == UNKNOWN
+        s_unk = (status[senders] == UNKNOWN) & edge_ok
         lower = rank[receivers] < rank[senders]
         # does sender have any lower-rank neighbour that is not OUT?
         blocked = s_unk & lower & (status[receivers] != OUT)
@@ -69,11 +74,26 @@ def _mis_fixpoint(senders, receivers, rank, n: int):
         probe = jnp.zeros((n,), jnp.int32).at[
             jnp.where(s_unk, receivers, n)].set(1, mode="drop")
         distinct = probe.sum()
-        return status, it + 1, q0 + scanned, q1 + distinct
+        # gate the wave counter on this lane actually having work: under a
+        # vmapped while_loop a finished batch lane may still execute the
+        # body, and the query counters are already zero then (s_unk empty)
+        live = unk.any().astype(jnp.int32)
+        return status, it + live, q0 + scanned, q1 + distinct
 
     status, iters, q0, q1 = jax.lax.while_loop(
         cond, body, (status0, jnp.int32(0), jnp.int32(0), jnp.int32(0)))
     return status, iters, q0, q1
+
+
+def _mis_fixpoint(senders, receivers, rank, n: int):
+    """Run the LFMIS fixpoint to completion inside one program.
+
+    The unmasked (single-graph) entry point: every edge lane is valid.
+    Returns (status(n,), iters, queries_nodedup, queries_dedup); see
+    :func:`_mis_fixpoint_masked` for the query-accounting model.
+    """
+    return _mis_fixpoint_masked(senders, receivers, rank, n,
+                                jnp.ones(senders.shape, bool))
 
 
 # --------------------------------------------------------------------------

@@ -89,6 +89,28 @@ def _walk_and_count(nbr, sampled, max_steps: int):
     return ncomp, total_steps, ok
 
 
+@functools.partial(jax.jit, static_argnames=("max_steps", "n"))
+def _walk_and_count_batch(nbr_b, sampled_b, max_steps: int, n: int):
+    """Vmapped walk + component count over a padded graph batch.
+
+    ``nbr_b`` is (B, n, 2) with padding vertices self-looped
+    (``nbr[v] = [v, v]``) and *marked sampled*, so each padding vertex costs
+    exactly 2 walk steps and contributes exactly 1 component — callers
+    subtract the padding counts per graph.  Real-cycle walks are unreachable
+    from padding, so each lane reproduces the unpadded sequential walk.
+
+    Returns (ncomp(B,), total_steps(B,), ok(B,)).
+    """
+    ids = jnp.arange(n, dtype=jnp.int32)
+
+    def one(nbr, sampled):
+        succ0, succ1, steps, ok = _walk(nbr, sampled, ids, max_steps)
+        ncomp = _count_components(succ0, succ1, sampled, ids, n)
+        return ncomp, steps, ok
+
+    return jax.vmap(one)(nbr_b, sampled_b)
+
+
 @jax.jit
 def _local_contraction_phase(a, b, parent, alive, rank):
     """One CC-LocalContraction phase: remove rank-local-minima, reconnect

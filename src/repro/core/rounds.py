@@ -39,12 +39,21 @@ class RoundLedger:
     def shuffle(self, name: str, nbytes: int = 0):
         t0 = time.perf_counter()
         yield
-        dt = time.perf_counter() - t0
+        self.record_shuffle(name, nbytes, seconds=time.perf_counter() - t0)
+
+    def record_shuffle(self, name: str, nbytes: int = 0,
+                       seconds: float = 0.0):
+        """Record one materialized round without timing a ``with`` block.
+
+        Used by batched (``solve_many``) launches, where one physical launch
+        serves many per-graph ledgers: each ledger records its own shuffle
+        entry with its share of the bytes and wall time.
+        """
         self.shuffles += 1
         self.bytes_shuffled += int(nbytes)
-        self.wall_time_s += dt
-        self.phase_times[name] = self.phase_times.get(name, 0.0) + dt
-        self.events.append(f"shuffle:{name}:{nbytes}B:{dt:.4f}s")
+        self.wall_time_s += seconds
+        self.phase_times[name] = self.phase_times.get(name, 0.0) + seconds
+        self.events.append(f"shuffle:{name}:{nbytes}B:{seconds:.4f}s")
 
     # -- DHT traffic -------------------------------------------------------
     def record_queries(self, n_queries: int, nbytes: int, waves: int = 1,

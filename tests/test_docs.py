@@ -1,0 +1,111 @@
+"""Docs-drift guards: the READMEs must track the registry, and the engine
+docstring examples must actually run.
+
+Checks:
+  * every problem name in ``src/repro/ampc/README.md``'s "Registered
+    problems" section resolves in the registry, and every registered name
+    appears there (bidirectional — the docs cannot silently rot);
+  * the batch-safe problem list in the "Batched serving" section matches
+    the set of registered batch adapters;
+  * the top-level README's python quickstart blocks parse;
+  * the doctest examples in ``repro/ampc/engine.py`` execute cleanly
+    (the same examples ``pytest --doctest-modules src/repro/ampc/engine.py``
+    runs standalone).
+"""
+import doctest
+import re
+from pathlib import Path
+
+import pytest
+
+from repro.ampc import registry
+
+REPO = Path(__file__).resolve().parent.parent
+AMPC_README = REPO / "src" / "repro" / "ampc" / "README.md"
+TOP_README = REPO / "README.md"
+
+_NAME = re.compile(r"`([a-z0-9][a-z0-9-]*)`")
+
+
+def _strip_fenced_blocks(text: str) -> str:
+    return re.sub(r"```.*?```", "", text, flags=re.S)
+
+
+def _section(text: str, header: str) -> str:
+    m = re.search(rf"^##\s+{re.escape(header)}\s*$(.*?)(?=^##\s|\Z)",
+                  text, re.S | re.M)
+    assert m, f"section {header!r} missing from {AMPC_README}"
+    return m.group(1)
+
+
+def test_ampc_readme_problem_list_matches_registry():
+    text = AMPC_README.read_text()
+    section = _strip_fenced_blocks(_section(text, "Registered problems"))
+    listed = set(_NAME.findall(section))
+    assert listed, "no problem names found in the Registered problems section"
+    # every listed token resolves (canonical names and aliases alike) ...
+    for name in sorted(listed):
+        try:
+            registry.get(name)
+        except KeyError:
+            pytest.fail(f"README lists unknown problem/alias {name!r}")
+    # ... and every registered problem is listed under its canonical name
+    for name in registry.names():
+        assert name in listed, f"registered problem {name!r} missing from " \
+            f"{AMPC_README}'s Registered problems section"
+
+
+def test_ampc_readme_batch_safe_list_matches_registry():
+    section = _section(AMPC_README.read_text(), "Batched serving: `solve_many`")
+    m = re.search(r"\*\*Batch-safe problems\*\*[^:]*:\s*(.*?)\.", section,
+                  re.S)
+    assert m, "Batch-safe problems sentence missing"
+    listed = {t for t in _NAME.findall(m.group(1))}
+    batched = {s.name for s in registry.specs() if s.batch_fn is not None}
+    assert listed == batched, (
+        f"README batch-safe list {sorted(listed)} != registered batch "
+        f"adapters {sorted(batched)}")
+
+
+def test_ampc_readme_module_table_covers_package():
+    text = AMPC_README.read_text()
+    pkg = AMPC_README.parent
+    modules = {p.name for p in pkg.glob("*.py") if p.name != "__init__.py"}
+    for mod in sorted(modules):
+        assert f"`{mod}`" in text, f"{mod} missing from the module table"
+
+
+def test_top_readme_quickstart_blocks_parse():
+    text = TOP_README.read_text()
+    blocks = re.findall(r"```python\n(.*?)```", text, re.S)
+    assert blocks, "README.md has no python quickstart blocks"
+    for i, block in enumerate(blocks):
+        compile(block, f"README.md:block{i}", "exec")
+
+
+def test_top_readme_links_resolve():
+    text = TOP_README.read_text()
+    for target in re.findall(r"\]\(([^)#]+)\)", text):
+        if target.startswith("http"):
+            continue
+        assert (REPO / target).exists(), f"README links to missing {target}"
+
+
+def test_engine_docstring_examples_execute():
+    from repro.ampc import engine
+    result = doctest.testmod(engine, verbose=False)
+    assert result.attempted >= 8, "engine.py doctest examples went missing"
+    assert result.failed == 0
+
+
+def test_benchmark_registry_docstring_matches_dispatch():
+    """benchmarks/registry.py documents the @bench contract; the registered
+    specs must actually follow it (run(**kwargs) plus quick_kwargs that the
+    harness can splat)."""
+    import sys
+    sys.path.insert(0, str(REPO))
+    from benchmarks import registry as breg
+    for name in breg.names():
+        spec = breg.get(name)
+        assert callable(spec.fn), name
+        assert isinstance(spec.quick_kwargs, dict), name

@@ -18,8 +18,8 @@ def test_benchmark_registry_lists_all_benches():
     from benchmarks import registry
     names = registry.names()
     for expected in ("table3_rounds", "bytes_comm", "mis_caching",
-                     "runtimes", "msf_queries", "gnn_dht_hillclimb",
-                     "roofline"):
+                     "runtimes", "msf_queries", "solve_many",
+                     "gnn_dht_hillclimb", "roofline"):
         assert expected in names, f"{expected} missing from registry"
     spec = registry.get("table3_rounds")
     assert spec.takes_graphs and spec.quick_kwargs.get("graph_names")
