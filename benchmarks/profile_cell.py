@@ -2,16 +2,54 @@
 
   PYTHONPATH=src python -m benchmarks.profile_cell --arch qwen2.5-32b \
       --shape train_4k
+
+Registered with the harness as ``profile_cell`` (``benchmarks.run --only
+profile_cell``).  Lowering against the production mesh needs
+``--xla_force_host_platform_device_count=512``, which must be set before
+jax initializes; the registered ``run()`` therefore re-invokes this module
+in a subprocess instead of lowering in-process, so the harness's own jax
+backend (already initialized with the default device count) is untouched.
 """
-import os
-os.environ["XLA_FLAGS"] = (os.environ.get("_EXTRA_XLA_FLAGS", "") +
-                           " --xla_force_host_platform_device_count=512").strip()
+from __future__ import annotations
 
 import argparse
 import json
+import os
+import subprocess
+import sys
+
+from .registry import bench
+
+_XLA_FLAG = "--xla_force_host_platform_device_count=512"
+
+
+@bench("profile_cell",
+       quick_kwargs={"arch": "gcn-cora", "shape": "full_graph_sm"},
+       summary="lower one GNN cell on the production mesh; roofline-attribute "
+               "FLOPs/bytes/collectives from the compiled HLO")
+def run(arch: str = "gcn-cora", shape: str = "full_graph_sm",
+        multi: bool = False, timeout: int = 600):
+    cmd = [sys.executable, "-m", "benchmarks.profile_cell",
+           "--arch", arch, "--shape", shape]
+    if multi:
+        cmd.append("--multi")
+    env = dict(os.environ)
+    env.setdefault("PYTHONPATH", "src")
+    proc = subprocess.run(cmd, env=env, capture_output=True, text=True,
+                          timeout=timeout)
+    print(proc.stdout, end="")
+    if proc.returncode != 0:
+        raise RuntimeError(
+            f"profile_cell subprocess failed ({proc.returncode}):\n"
+            f"{proc.stderr[-2000:]}")
+    # first line block of stdout is the roofline-terms JSON object
+    terms = json.loads(proc.stdout[:proc.stdout.index("}") + 1])
+    return {"arch": arch, "shape": shape, "terms": terms}
 
 
 def main():
+    os.environ["XLA_FLAGS"] = (
+        os.environ.get("_EXTRA_XLA_FLAGS", "") + " " + _XLA_FLAG).strip()
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
     ap.add_argument("--shape", required=True)

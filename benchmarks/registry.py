@@ -43,7 +43,7 @@ def load_all():
     """Import every benchmark module so decorators run; returns REGISTRY."""
     from . import (table3_rounds, bytes_comm, mis_caching, runtimes,  # noqa
                    msf_queries, solve_many, gnn_dht_hillclimb,        # noqa
-                   roofline)                                          # noqa
+                   profile_cell, roofline)                            # noqa
     return REGISTRY
 
 

@@ -9,12 +9,20 @@ dispatched through ``benchmarks.registry`` (each module self-registers with
   --graphs a,b,c    graph subset (names from benchmarks.common.GRAPHS) for
                     every benchmark that takes graphs; overrides --quick's
                     default subset
+  --trace out.json  record the whole run as a Chrome trace (open in
+                    chrome://tracing or https://ui.perfetto.dev): one
+                    ``bench:<name>`` span per benchmark, engine solves
+                    nested inside.  Also prints the metrics report.
 """
 from __future__ import annotations
 
 import argparse
 import sys
 import time
+
+from repro.obs import (Tracer, coverage, metrics_report, set_default_tracer,
+                       write_chrome_trace)
+from repro.obs.metrics import default_registry
 
 from . import registry
 from .common import GRAPHS
@@ -28,6 +36,8 @@ def main(argv=None):
     ap.add_argument("--graphs",
                     help="comma-separated subset of "
                          f"{sorted(GRAPHS)} for graph benchmarks")
+    ap.add_argument("--trace", metavar="OUT.json",
+                    help="write a Chrome/Perfetto trace of the run")
     args = ap.parse_args(argv)
     graph_names = None
     if args.graphs:
@@ -36,20 +46,45 @@ def main(argv=None):
         if unknown:
             ap.error(f"unknown graphs {unknown}; known: {sorted(GRAPHS)}")
     selected = [args.only] if args.only else names
+    tracer = None
+    if args.trace:
+        # engines created with trace=None inside the benchmarks inherit
+        # this tracer, so their solve spans nest under bench:<name>
+        tracer = Tracer()
+        set_default_tracer(tracer)
     results = {}
-    for name in selected:
-        spec = registry.get(name)
-        print(f"\n{'='*72}\n== {name}\n{'='*72}", flush=True)
-        t0 = time.time()
-        kw = dict(spec.quick_kwargs) if args.quick else {}
-        if spec.takes_graphs and graph_names is not None:
-            kw["graph_names"] = graph_names
-        try:
-            results[name] = spec.fn(**kw)
-            print(f"[{name} done in {time.time()-t0:.1f}s]")
-        except Exception as e:  # noqa: BLE001
-            print(f"[{name} FAILED: {e}]")
-            results[name] = {"error": str(e)}
+    wall0 = time.perf_counter()
+    try:
+        for name in selected:
+            spec = registry.get(name)
+            print(f"\n{'='*72}\n== {name}\n{'='*72}", flush=True)
+            t0 = time.time()
+            kw = dict(spec.quick_kwargs) if args.quick else {}
+            if spec.takes_graphs and graph_names is not None:
+                kw["graph_names"] = graph_names
+            try:
+                if tracer is not None:
+                    with tracer.span(f"bench:{name}"):
+                        results[name] = spec.fn(**kw)
+                else:
+                    results[name] = spec.fn(**kw)
+                print(f"[{name} done in {time.time()-t0:.1f}s]")
+            except Exception as e:  # noqa: BLE001
+                print(f"[{name} FAILED: {e}]")
+                results[name] = {"error": str(e)}
+    finally:
+        if tracer is not None:
+            set_default_tracer(None)
+    if tracer is not None:
+        wall_us = (time.perf_counter() - wall0) * 1e6
+        doc = write_chrome_trace(args.trace, tracer, extra_meta={
+            "measured_wall_us": int(wall_us),
+            "benchmarks": list(results)})
+        cov = coverage(tracer, wall_us)
+        print(f"\ntrace: {len(doc['traceEvents'])} events -> {args.trace} "
+              f"(span coverage {100 * cov:.1f}% of {wall_us / 1e6:.1f}s wall)")
+        print(f"\n{'='*72}\n== metrics\n{'='*72}")
+        print(metrics_report(default_registry()))
     failed = [k for k, v in results.items() if "error" in v]
     print(f"\n{'='*72}\n{len(selected)-len(failed)}/{len(selected)} "
           f"benchmarks succeeded" + (f"; FAILED: {failed}" if failed else ""))

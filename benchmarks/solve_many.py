@@ -19,6 +19,7 @@ import numpy as np
 from repro.ampc import AmpcEngine
 from repro.graph import generators as gen
 from repro.graph.batching import bucketize
+from repro.obs import NOOP_TRACER
 
 from .common import fmt_table
 from .registry import bench
@@ -34,6 +35,27 @@ def _fleet(fleet_size: int):
     return [gen.erdos_renyi(n, 4.0, seed=i) for i, n in enumerate(sizes)]
 
 
+def _disabled_tracer_overhead(fleet, prob, t_warm):
+    """Upper-bound what the observability hooks cost a warm ``solve_many``
+    pass with tracing *disabled*: count the span/event ops an enabled warm
+    pass emits, multiply by the measured cost of one no-op tracer call
+    (the disabled path does strictly less — most hooks are guarded behind
+    a single ``tracer.enabled`` attribute check)."""
+    eng = AmpcEngine(seed=0, trace=True, metrics=False)
+    eng.solve_many(fleet, prob)         # compile into this engine's cache
+    eng.tracer.clear()
+    eng.solve_many(fleet, prob)         # warm pass, every hook live
+    spans = eng.tracer.all_spans()
+    ops = len(spans) + sum(len(s.events) for s in spans)
+    reps = 100_000
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        with NOOP_TRACER.span("x"):
+            pass
+    per_op = (time.perf_counter() - t0) / reps
+    return ops, per_op, ops * per_op / max(t_warm, 1e-9)
+
+
 @bench("solve_many",
        quick_kwargs={"problems": ["mis", "matching"], "fleet_size": 8},
        summary="solve_many vs looped solve(): per-graph latency on a "
@@ -46,6 +68,7 @@ def run(problems=None, fleet_size: int = 16):
           f"{sorted(buckets)}")
     rows = []
     speedups = {}
+    warm_times = {}
     for prob in problems:
         eng = AmpcEngine(seed=0)   # fresh engine: cold solver cache
         t0 = time.perf_counter()
@@ -63,6 +86,7 @@ def run(problems=None, fleet_size: int = 16):
         info = eng.cache_info()
         n = len(fleet)
         speedups[prob] = t_loop / max(t_warm, 1e-9)
+        warm_times[prob] = t_warm
         rows.append([prob, n,
                      f"{1e3 * t_loop / n:.1f}", f"{1e3 * t_cold / n:.1f}",
                      f"{1e3 * t_warm / n:.1f}",
@@ -75,7 +99,16 @@ def run(problems=None, fleet_size: int = 16):
     print(out)
     print("\nper-graph latency: one vmapped launch per shape bucket vs one "
           "launch sequence per graph; warm = compiled-solver cache hits only")
+    probe = problems[0]
+    ops, per_op, frac = _disabled_tracer_overhead(
+        fleet, probe, warm_times[probe])
+    print(f"\ndisabled-tracer overhead ({probe} warm pass): {ops} hook ops "
+          f"x {per_op * 1e9:.0f}ns no-op = {100 * frac:.3f}% of "
+          f"{1e3 * warm_times[probe]:.1f}ms")
+    assert frac < 0.02, \
+        f"disabled-tracer overhead {100 * frac:.2f}% exceeds the 2% budget"
     return {"rows": rows, "markdown": out, "speedups": speedups,
+            "tracer_overhead_pct": 100 * frac,
             "buckets": {str(k): len(v) for k, v in buckets.items()}}
 
 

@@ -1,0 +1,25 @@
+#!/usr/bin/env bash
+# Repo health check: lint (when ruff is available) + the tier-1 test suite.
+#
+#   scripts/check.sh            # lint + full tier-1 pytest
+#   scripts/check.sh --fast     # lint + the observability/docs/engine subset
+#
+# ruff is optional (the dev container does not ship it); when absent the
+# lint step is skipped with a notice instead of failing the check.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+if command -v ruff >/dev/null 2>&1; then
+    echo "== ruff check"
+    ruff check src/repro benchmarks tests
+else
+    echo "== ruff not installed; skipping lint"
+fi
+
+echo "== tier-1 pytest"
+export PYTHONPATH=src
+if [[ "${1:-}" == "--fast" ]]; then
+    exec python -m pytest -x -q tests/test_obs.py tests/test_docs.py \
+        tests/test_engine.py tests/test_smoke_benchmarks.py
+fi
+exec python -m pytest -x -q

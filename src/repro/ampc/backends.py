@@ -25,6 +25,7 @@ import jax.numpy as jnp
 
 from ..core.dht import ShardedDHT
 from ..core.rounds import RoundLedger
+from ..obs import trace as obs_trace
 
 
 @runtime_checkable
@@ -79,6 +80,27 @@ class _BackendBase:
         values = jnp.asarray(values)
         keys = jnp.asarray(keys, jnp.int32)
         B, n = values.shape[0], values.shape[1]
+        tracer = next((led.tracer for led in (ledgers or ())
+                       if led is not None and led.tracer is not None
+                       and led.tracer.enabled), None)
+        if tracer is None:
+            # solve_many bucket ledgers carry no tracer (the engine emits
+            # per-graph spans retroactively); attach the batched exchange
+            # to whatever bucket span is currently open instead
+            amb = obs_trace.current_tracer()
+            tracer = amb if amb.enabled else None
+        if tracer is not None:
+            with tracer.span("dht:lookup_many", backend=self.name, batch=B,
+                             keys_per_graph=int(keys.shape[1])):
+                return self._lookup_many(values, keys, B, n,
+                                         ledgers=ledgers, key_mask=key_mask,
+                                         dedup=dedup, value_bytes=value_bytes)
+        return self._lookup_many(values, keys, B, n, ledgers=ledgers,
+                                 key_mask=key_mask, dedup=dedup,
+                                 value_bytes=value_bytes)
+
+    def _lookup_many(self, values, keys, B, n, *, ledgers, key_mask, dedup,
+                     value_bytes):
         flat_vals = values.reshape((B * n,) + values.shape[2:])
         offset = (jnp.arange(B, dtype=jnp.int32) * n)[:, None]
         flat_keys = keys + offset

@@ -43,11 +43,21 @@ class SolverCache:
     static walk budget of one-vs-two).
     """
 
-    def __init__(self):
+    def __init__(self, metrics=None):
         self._store: Dict[Hashable, Any] = {}
         self._hits = 0
         self._misses = 0
         self._lock = threading.Lock()
+        self.metrics = metrics  # obs.MetricsRegistry or None
+
+    def _report(self, hits: int, misses: int) -> None:
+        m = self.metrics
+        if m is None:
+            return
+        if hits:
+            m.counter("solver_cache_hits_total").inc(hits)
+        if misses:
+            m.counter("solver_cache_misses_total").inc(misses)
 
     def get_or_build(self, key: Hashable, builder: Callable[[], Any],
                      occupants: int = 1) -> Tuple[Any, bool]:
@@ -57,18 +67,26 @@ class SolverCache:
         them except the one paying a fresh build count as hits.
         """
         with self._lock:
-            if key in self._store:
+            cached = self._store.get(key)
+            if cached is not None:
                 self._hits += occupants
-                return self._store[key], True
+        if cached is not None:
+            self._report(occupants, 0)
+            return cached, True
         solver = builder()  # build outside the lock: tracing can be slow
         with self._lock:
-            if key in self._store:  # lost a race; the built copy is discarded
+            cached = self._store.get(key)
+            if cached is not None:  # lost a race; the built copy is discarded
                 self._hits += occupants
-                return self._store[key], True
-            self._store[key] = solver
-            self._misses += 1
-            self._hits += max(occupants - 1, 0)
-            return solver, False
+            else:
+                self._store[key] = solver
+                self._misses += 1
+                self._hits += max(occupants - 1, 0)
+        if cached is not None:
+            self._report(occupants, 0)
+            return cached, True
+        self._report(max(occupants - 1, 0), 1)
+        return solver, False
 
     def info(self) -> CacheInfo:
         with self._lock:

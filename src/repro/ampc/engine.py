@@ -19,6 +19,13 @@ fleet into power-of-two shape buckets and runs each bucket as one vmapped
 launch, memoizing the traced solver per ``(problem, backend, bucket)`` in
 an engine-level :class:`~repro.ampc.cache.SolverCache`
 (see :meth:`AmpcEngine.cache_info`).
+
+Observability (``repro.obs``): ``AmpcEngine(trace=True)`` records every
+solve as a span tree (``AmpcResult.trace``; export with
+``repro.obs.export.write_chrome_trace``), and the engine reports counters
+and latency histograms into a metrics registry —
+:meth:`AmpcEngine.metrics_report` renders it.  Both hooks default to
+disabled/no-op paths that cost essentially nothing per solve.
 """
 from __future__ import annotations
 
@@ -30,6 +37,8 @@ import numpy as np
 
 from ..core.rounds import RoundLedger
 from ..graph import batching
+from ..obs import metrics as obs_metrics
+from ..obs import trace as obs_trace
 from . import registry
 from .backends import DhtBackend, resolve_backend
 from .cache import CacheInfo, SolverCache
@@ -81,6 +90,10 @@ class AmpcResult:
     ledger: Dict[str, Any]
     wall_time_s: float
     raw_ledger: Optional[RoundLedger] = dataclasses.field(
+        repr=False, compare=False, default=None)
+    # obs.trace.Span for this solve when the engine traces (compare=False:
+    # outputs stay bit-identical with tracing on vs off, and == agrees)
+    trace: Optional[Any] = dataclasses.field(
         repr=False, compare=False, default=None)
 
     @property
@@ -147,6 +160,18 @@ class AmpcEngine:
     dht_backend:  ``"local"`` | ``"routed"`` | a ``DhtBackend`` instance.
     epsilon:      the paper's space exponent (per-machine space n^ε).
     seed:         default randomness for rank permutations / sampling.
+    trace:        ``True`` → record every solve as a span tree on a fresh
+                  tracer (``engine.tracer``); ``False`` → tracing off; a
+                  ``repro.obs.Tracer`` instance to share one tracer across
+                  engines; ``None`` (default) → the process-default tracer
+                  (no-op unless a harness installed one, e.g.
+                  ``benchmarks.run --trace``).
+    metrics:      a ``repro.obs.MetricsRegistry``, ``False`` to disable, or
+                  ``None`` (default) for the process-wide registry.
+    record_events:force the ``RoundLedger.events`` raw-string log on/off for
+                  every solve; ``None`` (default) keeps it on for ``solve``
+                  and **off inside ``solve_many`` bucket loops**, so
+                  long-lived serving sessions don't accumulate strings.
 
     >>> from repro.ampc import AmpcEngine
     >>> from repro.graph import generators as gen
@@ -160,15 +185,47 @@ class AmpcEngine:
     True
     >>> eng.cache_info().misses >= 1
     True
+
+    Tracing is one flag away; the per-solve span lands on the result:
+
+    >>> eng = AmpcEngine(seed=0, trace=True)
+    >>> res = eng.solve(gen.erdos_renyi(32, 2.0, seed=2), "mis")
+    >>> res.trace.name, res.trace.attributes["problem"]
+    ('solve', 'mis')
+    >>> [c.name for c in res.trace.children]
+    ['shuffle:DirectEdges+WriteKV', 'shuffle:IsInMIS']
     """
 
     def __init__(self, mesh=None, dht_backend="local", epsilon: float = 0.5,
-                 seed: int = 0):
+                 seed: int = 0, *, trace=None, metrics=None,
+                 record_events: Optional[bool] = None):
         self.mesh = mesh
         self.dht = resolve_backend(dht_backend, mesh=mesh)
         self.epsilon = float(epsilon)
         self.seed = int(seed)
-        self._solver_cache = SolverCache()
+        self.tracer = obs_trace.as_tracer(trace)
+        self.metrics = obs_metrics.as_registry(metrics)
+        self.record_events = record_events
+        self._solver_cache = SolverCache(metrics=self.metrics)
+
+    # ------------------------------------------------------------------
+    def _ledger(self, spec, record_events: bool) -> RoundLedger:
+        tracer = self.tracer
+        return RoundLedger(
+            f"{spec.model}_{spec.name}",
+            tracer=tracer if tracer.enabled else None,
+            metrics=self.metrics, record_events=record_events)
+
+    def _observe_solve(self, spec, wall: float, mode: str) -> None:
+        m = self.metrics
+        if m is None:
+            return
+        m.histogram("solve_latency_s",
+                    labelnames=("problem", "backend")).observe(
+                        wall, problem=spec.name, backend=self.dht.name)
+        m.counter("solves_total",
+                  labelnames=("problem", "backend", "mode")).inc(
+                      1, problem=spec.name, backend=self.dht.name, mode=mode)
 
     # ------------------------------------------------------------------
     def _validate(self, spec, graph) -> None:
@@ -183,34 +240,48 @@ class AmpcEngine:
 
     # ------------------------------------------------------------------
     def solve(self, graph, problem: str, *, seed: Optional[int] = None,
-              epsilon: Optional[float] = None, **opts) -> AmpcResult:
+              epsilon: Optional[float] = None,
+              record_events: Optional[bool] = None, **opts) -> AmpcResult:
         """Run ``problem`` on ``graph`` and return an ``AmpcResult``.
 
         ``**opts`` are forwarded to the registered solver (e.g.
         ``skip_ternarize_if_dense=False`` for msf, ``p=1/64`` for
-        one-vs-two).  ``seed``/``epsilon`` override the engine defaults for
-        this solve only.
+        one-vs-two).  ``seed``/``epsilon``/``record_events`` override the
+        engine defaults for this solve only.
         """
         spec = registry.get(problem)
         self._validate(spec, graph)
-        ledger = RoundLedger(f"{spec.model}_{spec.name}")
+        if record_events is None:
+            record_events = self.record_events
+        ledger = self._ledger(spec, True if record_events is None
+                              else record_events)
         ctx = SolveContext(
             ledger=ledger, dht=self.dht,
             seed=self.seed if seed is None else int(seed),
             epsilon=self.epsilon if epsilon is None else float(epsilon),
             mesh=self.mesh)
+        tracer = self.tracer
+        span = None
         t0 = time.perf_counter()
-        output, stats = spec.fn(ctx, graph, **opts)
+        if tracer.enabled:
+            with tracer.span("solve", problem=spec.name, model=spec.model,
+                             backend=self.dht.name, n=int(graph.n),
+                             m=int(graph.m)) as span:
+                output, stats = spec.fn(ctx, graph, **opts)
+        else:
+            output, stats = spec.fn(ctx, graph, **opts)
         wall = time.perf_counter() - t0
+        self._observe_solve(spec, wall, "solve")
         return AmpcResult(problem=spec.name, model=spec.model,
                           backend=self.dht.name, output=output, stats=stats,
                           ledger=ledger.summary(), wall_time_s=wall,
-                          raw_ledger=ledger)
+                          raw_ledger=ledger, trace=span)
 
     # ------------------------------------------------------------------
     def solve_many(self, graphs: Sequence[Any], problem: str, *,
                    seed: Optional[int] = None,
                    epsilon: Optional[float] = None,
+                   record_events: Optional[bool] = None,
                    **opts) -> List[AmpcResult]:
         """Solve ``problem`` on a fleet of graphs, one result per graph.
 
@@ -223,6 +294,14 @@ class AmpcEngine:
         outputs; ``wall_time_s`` is the bucket launch amortized over its
         occupants.
 
+        Bucket-loop ledgers default to ``record_events=False`` (the
+        structured trace supersedes the raw strings; pass
+        ``record_events=True`` to keep them).  With tracing enabled each
+        bucket launch is one ``bucket`` span whose per-graph ``graph[i]``
+        children carry that graph's ledger attribution (phase shares from
+        ``RoundLedger.record_shuffle``); ``result.trace`` points at the
+        graph's own span.
+
         Problems without a registered batch adapter (see
         ``src/repro/ampc/README.md`` for the list) fall back to sequential
         ``solve`` calls — same results, no batching speedup.
@@ -231,37 +310,82 @@ class AmpcEngine:
         spec = registry.get(problem)
         for g in graphs:
             self._validate(spec, g)
+        if record_events is None:
+            record_events = self.record_events
+        rec = False if record_events is None else record_events
         if spec.batch_fn is None:
-            return [self.solve(g, problem, seed=seed, epsilon=epsilon, **opts)
+            return [self.solve(g, problem, seed=seed, epsilon=epsilon,
+                               record_events=rec, **opts)
                     for g in graphs]
+        tracer = self.tracer
         results: List[Optional[AmpcResult]] = [None] * len(graphs)
-        for batch in batching.bucketize(graphs).values():
-            ledgers = [RoundLedger(f"{spec.model}_{spec.name}")
-                       for _ in range(len(batch))]
-            bctx = BatchSolveContext(
-                ledgers=ledgers, dht=self.dht,
-                seed=self.seed if seed is None else int(seed),
-                epsilon=self.epsilon if epsilon is None else float(epsilon),
-                cache=self._solver_cache, problem=spec.name,
-                backend_name=self.dht.name, mesh=self.mesh)
-            t0 = time.perf_counter()
-            outs = spec.batch_fn(bctx, batch, **opts)
-            wall = time.perf_counter() - t0
-            assert len(outs) == len(batch), \
-                f"batch adapter for {spec.name!r} returned {len(outs)} " \
-                f"results for {len(batch)} graphs"
-            per_graph_wall = wall / max(len(batch), 1)
-            for slot, (idx, (output, stats)) in enumerate(
-                    zip(batch.indices, outs)):
-                stats.setdefault("batch", {
-                    "bucket": batch.key, "batch_size": len(batch),
-                    "slot": slot})
-                results[idx] = AmpcResult(
-                    problem=spec.name, model=spec.model,
-                    backend=self.dht.name, output=output, stats=stats,
-                    ledger=ledgers[slot].summary(),
-                    wall_time_s=per_graph_wall, raw_ledger=ledgers[slot])
+        root = tracer.span("solve_many", problem=spec.name,
+                           backend=self.dht.name, n_graphs=len(graphs)) \
+            if tracer.enabled else None
+        if root is not None:
+            root.__enter__()
+        try:
+            for batch in batching.bucketize(graphs).values():
+                self._solve_bucket(spec, batch, results, rec,
+                                   seed=seed, epsilon=epsilon, **opts)
+        finally:
+            if root is not None:
+                root.__exit__(None, None, None)
         return results
+
+    def _solve_bucket(self, spec, batch, results, rec, *, seed, epsilon,
+                      **opts) -> None:
+        """One bucket launch of ``solve_many``: run, attribute, trace."""
+        tracer = self.tracer
+        # tracer=None on bucket ledgers: one physical launch must not emit
+        # B copies of every shuffle span — the per-graph share is attached
+        # retroactively below, from each ledger's phase_times.
+        ledgers = [RoundLedger(f"{spec.model}_{spec.name}",
+                               metrics=self.metrics, record_events=rec)
+                   for _ in range(len(batch))]
+        bctx = BatchSolveContext(
+            ledgers=ledgers, dht=self.dht,
+            seed=self.seed if seed is None else int(seed),
+            epsilon=self.epsilon if epsilon is None else float(epsilon),
+            cache=self._solver_cache, problem=spec.name,
+            backend_name=self.dht.name, mesh=self.mesh)
+        bspan = tracer.span(
+            "bucket", problem=spec.name, n_bucket=batch.n_bucket,
+            m_bucket=batch.m_bucket, batch_size=len(batch)) \
+            if tracer.enabled else None
+        t0 = time.perf_counter()
+        if bspan is not None:
+            with bspan:
+                outs = spec.batch_fn(bctx, batch, **opts)
+        else:
+            outs = spec.batch_fn(bctx, batch, **opts)
+        wall = time.perf_counter() - t0
+        assert len(outs) == len(batch), \
+            f"batch adapter for {spec.name!r} returned {len(outs)} " \
+            f"results for {len(batch)} graphs"
+        per_graph_wall = wall / max(len(batch), 1)
+        for slot, (idx, (output, stats)) in enumerate(
+                zip(batch.indices, outs)):
+            stats.setdefault("batch", {
+                "bucket": batch.key, "batch_size": len(batch),
+                "slot": slot})
+            ledger = ledgers[slot]
+            gspan = None
+            if bspan is not None:
+                gspan = tracer.record_span(
+                    f"graph[{idx}]", dur_s=per_graph_wall, parent=bspan,
+                    problem=spec.name, bucket=batch.key, slot=slot)
+                for phase, secs in ledger.phase_times.items():
+                    tracer.record_span(f"shuffle:{phase}", dur_s=secs,
+                                       parent=gspan,
+                                       algorithm=ledger.algorithm)
+            self._observe_solve(spec, per_graph_wall, "solve_many")
+            results[idx] = AmpcResult(
+                problem=spec.name, model=spec.model,
+                backend=self.dht.name, output=output, stats=stats,
+                ledger=ledger.summary(),
+                wall_time_s=per_graph_wall, raw_ledger=ledger,
+                trace=gspan)
 
     # ------------------------------------------------------------------
     def cache_info(self) -> CacheInfo:
@@ -276,6 +400,15 @@ class AmpcEngine:
     def clear_cache(self) -> None:
         """Drop every memoized solver and reset the hit/miss counters."""
         self._solver_cache.clear()
+
+    def metrics_report(self) -> str:
+        """Plain-text dump of this engine's metrics registry.
+
+        One line per labeled series (``name{labels} value``); histograms
+        show count/sum/percentiles.  Empty string when ``metrics=False``.
+        """
+        from ..obs.export import metrics_report
+        return metrics_report(self.metrics)
 
     # ------------------------------------------------------------------
     def problems(self, model: Optional[str] = None):

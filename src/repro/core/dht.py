@@ -20,7 +20,6 @@ reproduce the paper's Figure 4 measurement.
 """
 from __future__ import annotations
 
-import functools
 from typing import Tuple
 
 import jax
@@ -191,6 +190,14 @@ class ShardedDHT:
 
     def lookup(self, keys, dedup: bool = True):
         keys = jnp.asarray(keys, jnp.int32)
+        tracer = getattr(self.ledger, "tracer", None)
+        if tracer is not None and tracer.enabled:
+            with tracer.span("dht:lookup", backend=self.backend,
+                             keys=int(keys.size), dedup=dedup):
+                return self._lookup(keys, dedup)
+        return self._lookup(keys, dedup)
+
+    def _lookup(self, keys, dedup: bool):
         # negative keys are padding: they are never queried, so they count
         # neither as queries nor as dedup savings, on either backend
         valid = int(jax.device_get((keys >= 0).sum()))

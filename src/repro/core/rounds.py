@@ -11,14 +11,25 @@ committed (and, under the fault-tolerant runtime, checkpointed).  Adaptive
 in-round query waves performed via ``lax.while_loop`` count queries/DHT bytes
 but not shuffles — exactly the AMPC accounting.  MPC baselines call
 ``ledger.shuffle`` once per phase instead.
+
+Observability wiring (``repro.obs``): a ledger may carry a ``tracer`` and a
+``metrics`` registry.  Every shuffle then becomes a span (named
+``shuffle:<name>``, carrying its bytes) and every counter update lands in
+the engine-wide metric series (``shuffles_total``, ``dht_queries_total``,
+…) labeled by ``algorithm``.  Both default to disabled no-ops, so a bare
+``RoundLedger`` behaves exactly as before.
+
+Raw-string event accumulation is gated behind ``record_events``: the
+structured trace supersedes the strings, and long-lived engines serving
+``solve_many`` traffic must not grow an unbounded list per solve (the
+engine creates bucket-loop ledgers with ``record_events=False``).
 """
 from __future__ import annotations
 
 import contextlib
 import dataclasses
 import time
-from typing import Dict, List
-
+from typing import Any, Dict, List
 
 @dataclasses.dataclass
 class RoundLedger:
@@ -33,13 +44,23 @@ class RoundLedger:
     wall_time_s: float = 0.0
     phase_times: Dict[str, float] = dataclasses.field(default_factory=dict)
     events: List[str] = dataclasses.field(default_factory=list)
+    # observability hooks (repro.obs); None => disabled
+    tracer: Any = dataclasses.field(repr=False, compare=False, default=None)
+    metrics: Any = dataclasses.field(repr=False, compare=False, default=None)
+    record_events: bool = dataclasses.field(compare=False, default=True)
 
     # -- shuffle (materialized round) -------------------------------------
     @contextlib.contextmanager
     def shuffle(self, name: str, nbytes: int = 0):
+        tracer = self.tracer
         t0 = time.perf_counter()
-        yield
-        self.record_shuffle(name, nbytes, seconds=time.perf_counter() - t0)
+        if tracer is not None and tracer.enabled:
+            with tracer.span(f"shuffle:{name}", algorithm=self.algorithm,
+                             nbytes=int(nbytes)):
+                yield
+        else:
+            yield
+        self._count_shuffle(name, nbytes, time.perf_counter() - t0)
 
     def record_shuffle(self, name: str, nbytes: int = 0,
                        seconds: float = 0.0):
@@ -47,13 +68,29 @@ class RoundLedger:
 
         Used by batched (``solve_many``) launches, where one physical launch
         serves many per-graph ledgers: each ledger records its own shuffle
-        entry with its share of the bytes and wall time.
+        entry with its share of the bytes and wall time.  With a tracer the
+        share becomes a retroactive span under the current open span.
         """
+        tracer = self.tracer
+        if tracer is not None and tracer.enabled:
+            tracer.record_span(f"shuffle:{name}", dur_s=seconds,
+                               algorithm=self.algorithm, nbytes=int(nbytes))
+        self._count_shuffle(name, nbytes, seconds)
+
+    def _count_shuffle(self, name: str, nbytes: int, seconds: float):
         self.shuffles += 1
         self.bytes_shuffled += int(nbytes)
         self.wall_time_s += seconds
         self.phase_times[name] = self.phase_times.get(name, 0.0) + seconds
-        self.events.append(f"shuffle:{name}:{nbytes}B:{seconds:.4f}s")
+        if self.record_events:
+            self.events.append(f"shuffle:{name}:{nbytes}B:{seconds:.4f}s")
+        if self.metrics is not None:
+            self.metrics.counter(
+                "shuffles_total", labelnames=("algorithm",)).inc(
+                    1, algorithm=self.algorithm)
+            self.metrics.counter(
+                "bytes_shuffled_total", labelnames=("algorithm",)).inc(
+                    int(nbytes), algorithm=self.algorithm)
 
     # -- DHT traffic -------------------------------------------------------
     def record_queries(self, n_queries: int, nbytes: int, waves: int = 1,
@@ -63,6 +100,25 @@ class RoundLedger:
         self.dht_query_waves += int(waves)
         self.dedup_savings += int(deduped_away)
         self.dht_overflows += int(overflow)
+        tracer = self.tracer
+        if tracer is not None and tracer.enabled:
+            tracer.event("dht_queries", queries=int(n_queries),
+                         nbytes=int(nbytes), waves=int(waves),
+                         deduped_away=int(deduped_away),
+                         overflow=int(overflow))
+        m = self.metrics
+        if m is not None:
+            labels = {"labelnames": ("algorithm",)}
+            kw = {"algorithm": self.algorithm}
+            m.counter("dht_queries_total", **labels).inc(int(n_queries), **kw)
+            m.counter("dht_bytes_total", **labels).inc(int(nbytes), **kw)
+            m.counter("dht_query_waves_total", **labels).inc(int(waves), **kw)
+            if deduped_away:
+                m.counter("dedup_savings_total", **labels).inc(
+                    int(deduped_away), **kw)
+            if overflow:
+                m.counter("dht_overflows_total", **labels).inc(
+                    int(overflow), **kw)
 
     def summary(self) -> Dict:
         return {

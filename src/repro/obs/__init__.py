@@ -1,0 +1,37 @@
+"""Observability for the AMPC engine: tracing, metrics, exporters.
+
+Three self-contained layers, wired through the engine / ledger / backends:
+
+* :mod:`repro.obs.trace`   — span-based tracer (nested spans, wall time,
+  attributes, thread-safe collection) with an allocation-free no-op path
+  when tracing is disabled;
+* :mod:`repro.obs.metrics` — engine-wide metrics registry (counters,
+  gauges, histograms with labels) plus the canonical ``ENGINE_METRICS``
+  table the docs are checked against;
+* :mod:`repro.obs.export`  — Chrome-trace/Perfetto JSON, JSONL event log,
+  and plain-text metrics reports.
+
+Quickstart::
+
+    from repro.ampc import AmpcEngine
+    from repro.obs import export
+
+    eng = AmpcEngine(trace=True)
+    res = eng.solve(graph, "mis")         # res.trace = this solve's span
+    export.write_chrome_trace("out.json", eng.tracer)
+    print(eng.metrics_report())
+"""
+from .trace import (NOOP_TRACER, Span, SpanEvent, Tracer, as_tracer,
+                    current_tracer, get_default_tracer, set_default_tracer)
+from .metrics import (ENGINE_METRICS, MetricDef, MetricsRegistry,
+                      default_registry)
+from .export import (coverage, iter_spans, metrics_report, to_chrome_trace,
+                     write_chrome_trace, write_jsonl)
+
+__all__ = [
+    "Tracer", "Span", "SpanEvent", "NOOP_TRACER", "as_tracer",
+    "current_tracer", "get_default_tracer", "set_default_tracer",
+    "MetricsRegistry", "MetricDef", "ENGINE_METRICS", "default_registry",
+    "to_chrome_trace", "write_chrome_trace", "write_jsonl", "iter_spans",
+    "metrics_report", "coverage",
+]

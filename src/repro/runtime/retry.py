@@ -12,13 +12,23 @@ Two concerns are handled here:
    treat exactly like a lost executable.
 
 2. **Bounded retries**: repeated failure surfaces the original error.
+
+Every retry is observable, not just logged: it increments
+``retry_transients_total{marker}`` on the process metrics registry
+(:func:`repro.obs.metrics.default_registry`) and attaches a WARN-level
+``transient_retry`` event to whatever span is currently open (the
+enclosing solve / benchmark), so retries show up inline in exported
+timelines.
 """
 from __future__ import annotations
 
 import logging
-from typing import Any, Callable
+from typing import Any, Callable, Optional
 
 import jax
+
+from ..obs import metrics as obs_metrics
+from ..obs import trace as obs_trace
 
 log = logging.getLogger(__name__)
 
@@ -29,9 +39,27 @@ _TRANSIENT_MARKERS = (
 )
 
 
-def is_transient(err: Exception) -> bool:
+def transient_marker(err: Exception) -> Optional[str]:
+    """The first transient marker matching ``err``, or None."""
     msg = str(err)
-    return any(marker in msg for marker in _TRANSIENT_MARKERS)
+    for marker in _TRANSIENT_MARKERS:
+        if marker in msg:
+            return marker
+    return None
+
+
+def is_transient(err: Exception) -> bool:
+    return transient_marker(err) is not None
+
+
+def _observe_retry(marker: str, attempt: int, retries: int,
+                   err: Exception) -> None:
+    obs_metrics.default_registry().counter(
+        "retry_transients_total", labelnames=("marker",)).inc(1,
+                                                              marker=marker)
+    obs_trace.current_tracer().event(
+        "transient_retry", level="WARN", marker=marker, attempt=attempt,
+        retries=retries, error=str(err)[:200])
 
 
 def resilient_call(fn: Callable, *args, _retries: int = 2, **kwargs) -> Any:
@@ -42,9 +70,11 @@ def resilient_call(fn: Callable, *args, _retries: int = 2, **kwargs) -> Any:
         try:
             return fn(*args, **kwargs)
         except ValueError as e:  # jaxlib surfaces XLA runtime errors as ValueError
-            if attempt >= _retries or not is_transient(e):
+            marker = transient_marker(e)
+            if attempt >= _retries or marker is None:
                 raise
             attempt += 1
+            _observe_retry(marker, attempt, _retries, e)
             log.warning("transient launch failure (%s); clearing caches and "
                         "retrying (%d/%d)", e, attempt, _retries)
             try:

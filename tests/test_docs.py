@@ -98,6 +98,54 @@ def test_engine_docstring_examples_execute():
     assert result.failed == 0
 
 
+def test_architecture_metric_table_matches_engine_metrics():
+    """The Observability metric table in docs/architecture.md must stay in
+    sync with the canonical obs.metrics.ENGINE_METRICS definitions
+    (name, kind, and label set per metric, bidirectionally)."""
+    from repro.obs.metrics import ENGINE_METRICS
+
+    text = (REPO / "docs" / "architecture.md").read_text()
+    section = re.search(r"### Metric names.*?\n\n(\|.*?)\n\n", text, re.S)
+    assert section, "Metric names table missing from docs/architecture.md"
+    rows = [r for r in section.group(1).splitlines()
+            if r.startswith("| `")]
+    code = re.compile(r"`([a-z0-9_]+)`")
+    documented = {}
+    for row in rows:
+        cells = [c.strip() for c in row.strip("|").split("\\|")[0].split("|")]
+        name = cells[0].strip("`")
+        documented[name] = (cells[1], tuple(code.findall(cells[2])))
+    assert set(documented) == set(ENGINE_METRICS), (
+        f"docs table metrics {sorted(documented)} != ENGINE_METRICS "
+        f"{sorted(ENGINE_METRICS)}")
+    for name, mdef in ENGINE_METRICS.items():
+        kind, labels = documented[name]
+        assert kind == mdef.kind, f"{name}: docs say {kind}, code {mdef.kind}"
+        assert labels == mdef.labels, \
+            f"{name}: docs labels {labels} != code labels {mdef.labels}"
+
+
+def test_architecture_ledger_metric_map_resolves():
+    """Every row of the ledger→metrics map must name a real RoundLedger
+    field and a declared metric."""
+    from repro.core.rounds import RoundLedger
+    from repro.obs.metrics import ENGINE_METRICS
+
+    text = (REPO / "docs" / "architecture.md").read_text()
+    section = re.search(r"### Ledger → metrics map.*?\n\n.*?\n\n(\|.*?)\n\n",
+                        text, re.S)
+    assert section, "Ledger → metrics map missing from docs/architecture.md"
+    ledger_fields = {f.name for f in
+                     __import__("dataclasses").fields(RoundLedger)}
+    rows = [re.findall(r"`([a-z0-9_]+)`", r)
+            for r in section.group(1).splitlines() if r.startswith("| `")]
+    rows = [r for r in rows if len(r) >= 2]
+    assert len(rows) >= 7
+    for field, metric in rows:
+        assert field in ledger_fields, f"unknown ledger field {field!r}"
+        assert metric in ENGINE_METRICS, f"unknown metric {metric!r}"
+
+
 def test_benchmark_registry_docstring_matches_dispatch():
     """benchmarks/registry.py documents the @bench contract; the registered
     specs must actually follow it (run(**kwargs) plus quick_kwargs that the

@@ -1,0 +1,319 @@
+"""Observability subsystem: tracer, metrics registry, exporters, and the
+engine wiring (per-graph solve_many attribution, disabled-path invariants).
+"""
+import json
+import threading
+
+import numpy as np
+import pytest
+
+from repro.ampc import AmpcEngine
+from repro.graph import generators as gen
+from repro.obs import (NOOP_TRACER, MetricsRegistry, Tracer, current_tracer,
+                       set_default_tracer)
+from repro.obs.export import (coverage, to_chrome_trace, write_chrome_trace,
+                              write_jsonl)
+from repro.obs.metrics import ENGINE_METRICS
+from repro.obs.trace import NOOP_SPAN
+from repro.runtime.retry import resilient_call
+
+
+# ---------------------------------------------------------------- tracer
+def test_span_nesting_and_attributes():
+    tr = Tracer()
+    with tr.span("outer", phase="a") as outer:
+        outer.set(extra=1)
+        with tr.span("inner"):
+            pass
+        with tr.span("inner"):
+            pass
+    roots = tr.spans()
+    assert [r.name for r in roots] == ["outer"]
+    assert [c.name for c in roots[0].children] == ["inner", "inner"]
+    assert roots[0].attributes == {"phase": "a", "extra": 1}
+    assert roots[0].dur_us >= max(c.dur_us for c in roots[0].children)
+    assert len(roots[0].find("inner")) == 2
+
+
+def test_span_error_annotation():
+    tr = Tracer()
+    with pytest.raises(RuntimeError):
+        with tr.span("boom"):
+            raise RuntimeError("x")
+    [sp] = tr.spans()
+    assert sp.attributes["error"] == "RuntimeError"
+
+
+def test_threaded_collection_keeps_stacks_separate():
+    tr = Tracer()
+    barrier = threading.Barrier(4)
+
+    def worker(i):
+        barrier.wait()
+        with tr.span(f"w{i}"):
+            with tr.span("child"):
+                pass
+
+    threads = [threading.Thread(target=worker, args=(i,)) for i in range(4)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    roots = tr.spans()
+    # one root per thread, each with exactly its own child (no cross-thread
+    # nesting even though all four traced concurrently)
+    assert sorted(r.name for r in roots) == ["w0", "w1", "w2", "w3"]
+    assert all(len(r.children) == 1 and r.children[0].name == "child"
+               for r in roots)
+    tids = {r.thread_id for r in roots}
+    assert len(tids) == 4
+
+
+def test_record_span_retroactive_parenting():
+    tr = Tracer()
+    with tr.span("launch") as sp:
+        pass
+    g = tr.record_span("graph[0]", dur_s=0.25, parent=sp, slot=0)
+    assert sp.children == [g]
+    assert g.dur_us == 250_000
+    # without an explicit parent and no open span, it becomes a root
+    r = tr.record_span("orphan", dur_s=0.1)
+    assert r in tr.spans()
+
+
+def test_noop_tracer_fast_path_is_allocation_free():
+    assert NOOP_TRACER.enabled is False
+    assert NOOP_TRACER.span("x", a=1) is NOOP_SPAN
+    assert NOOP_TRACER.record_span("y", dur_s=1.0) is NOOP_SPAN
+    with NOOP_TRACER.span("x") as sp:
+        assert sp is NOOP_SPAN
+        sp.event("e")
+        assert sp.set(a=1) is NOOP_SPAN
+    assert NOOP_TRACER.spans() == []
+    assert NOOP_TRACER.all_spans() == []
+
+
+def test_current_tracer_follows_open_spans():
+    assert current_tracer() is NOOP_TRACER
+    tr = Tracer()
+    with tr.span("outer"):
+        assert current_tracer() is tr
+        tr.event("note", level="WARN", k=1)
+    assert current_tracer() is NOOP_TRACER
+    [sp] = tr.spans()
+    assert sp.events[0].name == "note"
+    assert sp.events[0].level == "WARN"
+
+
+# ---------------------------------------------------------------- export
+def test_chrome_trace_roundtrip():
+    tr = Tracer()
+    with tr.span("solve", problem="mis"):
+        with tr.span("shuffle:phase", nbytes=128) as sp:
+            sp.event("dht_queries", queries=7)
+    doc = json.loads(json.dumps(to_chrome_trace(tr)))
+    evs = doc["traceEvents"]
+    complete = [e for e in evs if e["ph"] == "X"]
+    instants = [e for e in evs if e["ph"] == "i"]
+    meta = [e for e in evs if e["ph"] == "M"]
+    assert {e["name"] for e in complete} == {"solve", "shuffle:phase"}
+    for e in complete:
+        assert isinstance(e["ts"], int) and isinstance(e["dur"], int)
+        assert e["dur"] >= 0 and e["pid"] and e["tid"]
+    assert instants[0]["name"] == "dht_queries"
+    assert instants[0]["args"]["queries"] == 7
+    assert meta and meta[0]["args"]["name"] == "main"
+    assert doc["displayTimeUnit"] == "ms"
+
+
+def test_chrome_trace_file_and_jsonl(tmp_path):
+    tr = Tracer()
+    with tr.span("a"):
+        with tr.span("b"):
+            pass
+    p = tmp_path / "trace.json"
+    doc = write_chrome_trace(str(p), tr, extra_meta={"k": "v"})
+    on_disk = json.loads(p.read_text())
+    assert on_disk == json.loads(json.dumps(doc))
+    assert on_disk["otherData"] == {"k": "v"}
+    jl = tmp_path / "spans.jsonl"
+    n = write_jsonl(str(jl), tr)
+    lines = [json.loads(line) for line in jl.read_text().splitlines()]
+    assert n == len(lines) == 2
+    child = next(ln for ln in lines if ln["name"] == "b")
+    parent = next(ln for ln in lines if ln["name"] == "a")
+    assert child["parent_id"] == parent["span_id"]
+
+
+def test_coverage_fraction():
+    tr = Tracer()
+    with tr.span("root"):
+        pass
+    [sp] = tr.spans()
+    assert coverage(tr, sp.dur_us) == pytest.approx(1.0)
+    assert coverage(tr, sp.dur_us * 2) == pytest.approx(0.5)
+
+
+# ---------------------------------------------------------------- metrics
+def test_metrics_label_aggregation():
+    reg = MetricsRegistry()
+    c = reg.counter("dht_queries_total", labelnames=("algorithm",))
+    c.inc(3, algorithm="ampc_mis")
+    c.inc(2, algorithm="ampc_mis")
+    c.inc(5, algorithm="ampc_msf")
+    assert c.value(algorithm="ampc_mis") == 5
+    assert c.value(algorithm="ampc_msf") == 5
+    # same name resolves to the same metric; mismatches are rejected
+    assert reg.counter("dht_queries_total",
+                       labelnames=("algorithm",)) is c
+    with pytest.raises(ValueError):
+        reg.counter("dht_queries_total", labelnames=("other",))
+    with pytest.raises(ValueError):
+        reg.gauge("dht_queries_total", labelnames=("algorithm",))
+    with pytest.raises(ValueError):
+        c.inc(1)  # missing the algorithm label
+    h = reg.histogram("solve_latency_s", labelnames=("problem", "backend"))
+    h.observe(0.1, problem="mis", backend="local")
+    h.observe(0.3, problem="mis", backend="local")
+    st = h.stats(problem="mis", backend="local")
+    assert st["count"] == 2 and st["sum"] == pytest.approx(0.4)
+    rep = reg.report()
+    assert 'dht_queries_total{algorithm="ampc_mis"}  5' in rep
+    assert "solve_latency_s" in rep
+
+
+# ------------------------------------------------------------ engine wiring
+def test_solve_outputs_bit_identical_with_tracing_on_vs_off():
+    g = gen.erdos_renyi(64, 3.0, seed=3)
+    reg = MetricsRegistry()
+    res_on = AmpcEngine(seed=0, trace=True, metrics=reg).solve(g, "mis")
+    res_off = AmpcEngine(seed=0, trace=False, metrics=False).solve(g, "mis")
+    assert np.array_equal(np.asarray(res_on.output),
+                          np.asarray(res_off.output))
+    for key in ("shuffles", "bytes_shuffled", "dht_queries", "dht_bytes",
+                "dht_query_waves", "dedup_savings", "dht_overflows"):
+        assert res_on.ledger[key] == res_off.ledger[key], key
+    assert res_on.trace is not None and res_off.trace is None
+
+
+def test_solve_span_tree_and_metrics():
+    reg = MetricsRegistry()
+    eng = AmpcEngine(seed=0, trace=True, metrics=reg)
+    res = eng.solve(gen.erdos_renyi(48, 3.0, seed=1), "mis")
+    sp = res.trace
+    assert sp.name == "solve"
+    assert sp.attributes["problem"] == "mis"
+    shuffles = [c for c in sp.children if c.name.startswith("shuffle:")]
+    assert len(shuffles) == res.shuffles
+    # dht lookups nest inside the solve span
+    assert sp.find("dht:lookup")
+    assert reg.counter("shuffles_total", labelnames=("algorithm",)) \
+        .value(algorithm="ampc_mis") == res.shuffles
+    assert reg.histogram("solve_latency_s",
+                         labelnames=("problem", "backend")) \
+        .stats(problem="mis", backend="local")["count"] == 1
+
+
+def test_solve_many_per_graph_trace_matches_ledger_shares():
+    eng = AmpcEngine(seed=0, trace=True, metrics=False)
+    fleet = [gen.erdos_renyi(48, 3.0, seed=s) for s in range(3)]
+    results = eng.solve_many(fleet, "mis")
+    [root] = [r for r in eng.tracer.spans() if r.name == "solve_many"]
+    buckets = [c for c in root.children if c.name == "bucket"]
+    assert buckets, "bucket launches must nest under solve_many"
+    graph_spans = [c for b in buckets for c in b.children
+                   if c.name.startswith("graph[")]
+    assert len(graph_spans) == len(fleet)
+    for idx, res in enumerate(results):
+        sp = res.trace
+        assert sp is not None and sp.name == f"graph[{idx}]"
+        assert sp in graph_spans
+        # the span's shuffle children are exactly the ledger's phase_times
+        # shares recorded through RoundLedger.record_shuffle
+        by_name = {c.name: c for c in sp.children}
+        phases = res.raw_ledger.phase_times
+        assert set(by_name) == {f"shuffle:{p}" for p in phases}
+        for phase, secs in phases.items():
+            assert by_name[f"shuffle:{phase}"].dur_us == int(secs * 1e6)
+    # the batched DHT exchange attaches to the bucket via the ambient tracer
+    assert root.find("dht:lookup_many")
+
+
+def test_solve_many_gates_ledger_events_by_default():
+    eng = AmpcEngine(seed=0, trace=False, metrics=False)
+    fleet = [gen.erdos_renyi(48, 3.0, seed=s) for s in range(2)]
+    batched = eng.solve_many(fleet, "mis")
+    assert all(r.raw_ledger.events == [] for r in batched)
+    assert all(r.raw_ledger.shuffles > 0 for r in batched)   # still counted
+    single = eng.solve(fleet[0], "mis")
+    assert single.raw_ledger.events                          # solve keeps them
+    kept = eng.solve_many(fleet, "mis", record_events=True)
+    assert all(r.raw_ledger.events for r in kept)
+
+
+def test_default_tracer_inherited_by_engines():
+    tr = Tracer()
+    set_default_tracer(tr)
+    try:
+        eng = AmpcEngine(seed=0, metrics=False)   # trace=None -> default
+        res = eng.solve(gen.erdos_renyi(32, 2.0, seed=1), "mis")
+        assert res.trace is not None
+        assert res.trace in tr.spans()
+    finally:
+        set_default_tracer(None)
+    eng = AmpcEngine(seed=0, metrics=False)
+    assert eng.solve(gen.erdos_renyi(32, 2.0, seed=1), "mis").trace is None
+
+
+# ---------------------------------------------------------------- retry
+def test_retry_counts_metric_and_emits_warn_event():
+    from repro.obs.metrics import default_registry
+
+    calls = {"n": 0}
+
+    def flaky():
+        calls["n"] += 1
+        if calls["n"] == 1:
+            raise ValueError("RESOURCE_EXHAUSTED: injected")
+        return 42
+
+    reg = default_registry()
+    before = reg.counter("retry_transients_total",
+                         labelnames=("marker",)).value(
+                             marker="RESOURCE_EXHAUSTED")
+    tr = Tracer()
+    with tr.span("solve"):
+        assert resilient_call(flaky) == 42
+    after = reg.counter("retry_transients_total",
+                        labelnames=("marker",)).value(
+                            marker="RESOURCE_EXHAUSTED")
+    assert after == before + 1
+    [sp] = tr.spans()
+    [ev] = [e for e in sp.events if e.name == "transient_retry"]
+    assert ev.level == "WARN"
+    assert ev.attributes["marker"] == "RESOURCE_EXHAUSTED"
+    assert ev.attributes["attempt"] == 1
+
+
+def test_engine_metrics_report_and_disabled():
+    reg = MetricsRegistry()
+    eng = AmpcEngine(seed=0, metrics=reg)
+    eng.solve(gen.erdos_renyi(32, 2.0, seed=1), "mis")
+    rep = eng.metrics_report()
+    assert "solves_total" in rep and "shuffles_total" in rep
+    assert AmpcEngine(seed=0, metrics=False).metrics_report() == \
+        "(metrics disabled)"
+
+
+def test_engine_metric_names_are_canonical():
+    """Every metric the engine stack emits must be declared in
+    ENGINE_METRICS (the table the docs are checked against)."""
+    reg = MetricsRegistry()
+    eng = AmpcEngine(seed=0, trace=True, metrics=reg)
+    fleet = [gen.erdos_renyi(48, 3.0, seed=s) for s in range(2)]
+    eng.solve_many(fleet, "mis")
+    eng.solve(fleet[0], "mis")
+    for name, metric in reg.metrics().items():
+        assert name in ENGINE_METRICS, f"undeclared metric {name}"
+        assert ENGINE_METRICS[name].kind == metric.kind
+        assert ENGINE_METRICS[name].labels == metric.labelnames

@@ -19,7 +19,7 @@ def test_benchmark_registry_lists_all_benches():
     names = registry.names()
     for expected in ("table3_rounds", "bytes_comm", "mis_caching",
                      "runtimes", "msf_queries", "solve_many",
-                     "gnn_dht_hillclimb", "roofline"):
+                     "gnn_dht_hillclimb", "profile_cell", "roofline"):
         assert expected in names, f"{expected} missing from registry"
     spec = registry.get("table3_rounds")
     assert spec.takes_graphs and spec.quick_kwargs.get("graph_names")
@@ -39,3 +39,32 @@ def test_unknown_graph_rejected():
     from benchmarks import run as bench_run
     with pytest.raises(SystemExit):
         bench_run.main(["--only", "table3_rounds", "--graphs", "nope"])
+
+
+def test_quick_trace_produces_valid_chrome_trace(tmp_path):
+    """--trace writes a loadable Chrome trace whose bench spans cover
+    >= 95% of the measured wall time."""
+    import json
+
+    from benchmarks import run as bench_run
+    from repro.obs import current_tracer, get_default_tracer, NOOP_TRACER
+
+    out = tmp_path / "trace.json"
+    rc = bench_run.main(["--quick", "--only", "table3_rounds",
+                         "--graphs", "er10", "--trace", str(out)])
+    assert rc == 0
+    # the harness tracer must not leak into later engine constructions
+    assert get_default_tracer() is NOOP_TRACER
+    assert current_tracer() is NOOP_TRACER
+    doc = json.loads(out.read_text())
+    xs = [e for e in doc["traceEvents"] if e["ph"] == "X"]
+    assert any(e["name"] == "bench:table3_rounds" for e in xs)
+    for e in xs:
+        assert isinstance(e["ts"], int) and isinstance(e["dur"], int)
+        assert e["dur"] >= 0 and e["pid"] and "tid" in e
+    # solves traced inside the benchmark nest under the bench span
+    assert any(e["name"] == "solve" for e in xs)
+    wall = doc["otherData"]["measured_wall_us"]
+    covered = sum(e["dur"] for e in xs if e["name"].startswith("bench:"))
+    assert covered >= 0.95 * wall, \
+        f"bench spans cover {covered}/{wall}us (< 95%)"
