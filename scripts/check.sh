@@ -6,8 +6,29 @@
 #
 # ruff is optional (the dev container does not ship it); when absent the
 # lint step is skipped with a notice instead of failing the check.
+#
+# The pytest run is wrapped in coreutils timeout(1) so a wedged worker
+# pool (async-engine deadlock) fails the check loudly instead of hanging
+# CI forever.  Override the budget with CHECK_TIMEOUT_SECS.
 set -euo pipefail
 cd "$(dirname "$0")/.."
+
+TIMEOUT_SECS="${CHECK_TIMEOUT_SECS:-2400}"
+run_pytest() {
+    if command -v timeout >/dev/null 2>&1; then
+        # -k 30: SIGKILL stragglers 30s after the initial SIGTERM
+        timeout -k 30 "$TIMEOUT_SECS" python -m pytest "$@" || {
+            rc=$?
+            if [[ $rc == 124 || $rc == 137 ]]; then
+                echo "== pytest exceeded ${TIMEOUT_SECS}s — possible" \
+                     "pool deadlock (see tests/test_async_engine.py)" >&2
+            fi
+            return $rc
+        }
+    else
+        python -m pytest "$@"
+    fi
+}
 
 if command -v ruff >/dev/null 2>&1; then
     echo "== ruff check"
@@ -19,7 +40,9 @@ fi
 echo "== tier-1 pytest"
 export PYTHONPATH=src
 if [[ "${1:-}" == "--fast" ]]; then
-    exec python -m pytest -x -q tests/test_obs.py tests/test_docs.py \
-        tests/test_engine.py tests/test_smoke_benchmarks.py
+    run_pytest -x -q tests/test_obs.py tests/test_docs.py \
+        tests/test_engine.py tests/test_smoke_benchmarks.py \
+        tests/test_async_engine.py
+    exit $?
 fi
-exec python -m pytest -x -q
+run_pytest -x -q

@@ -5,19 +5,25 @@ One entry point for every algorithm the paper studies::
     from repro.ampc import AmpcEngine
     res = AmpcEngine(dht_backend="routed").solve(g, "msf")
     results = AmpcEngine().solve_many(graphs, "mis")   # batched serving
+    fut = AmpcEngine().submit(g, "mis")                # async serving
+    sess = AmpcEngine().session(g)                     # snapshot reuse
 
 See README.md in this directory for the engine / registry / backend design,
-the batched ``solve_many`` path + compiled-solver cache, and the
+the batched ``solve_many`` path + compiled-solver cache, the async
+``submit`` worker pool + ``GraphSession`` snapshot reuse, and the
 deprecation path for the old per-module functions.
 """
+from .async_engine import AmpcFuture
 from .backends import DhtBackend, LocalDht, RoutedDht, resolve_backend
 from .cache import CacheInfo, SolverCache
 from .engine import AmpcEngine, AmpcResult, BatchSolveContext, SolveContext
 from .registry import ProblemSpec, batched_impl, get as get_problem, \
     names as problem_names, problem, specs as problem_specs
+from .session import GraphSession, GraphSnapshot, SNAPSHOT_PROBLEMS
 
 __all__ = [
     "AmpcEngine", "AmpcResult", "SolveContext", "BatchSolveContext",
+    "AmpcFuture", "GraphSession", "GraphSnapshot", "SNAPSHOT_PROBLEMS",
     "DhtBackend", "LocalDht", "RoutedDht", "resolve_backend",
     "CacheInfo", "SolverCache",
     "ProblemSpec", "problem", "batched_impl", "get_problem", "problem_names",

@@ -97,6 +97,19 @@ class SolverCache:
         with self._lock:
             return sorted(self._store, key=repr)
 
+    def evict(self, prefix: Hashable) -> int:
+        """Drop every entry whose key equals ``prefix`` or is a tuple
+        starting with it (``GraphSession.invalidate`` evicts all views of
+        one snapshot this way).  Counters are kept — eviction is not a
+        reset.  Returns the number of entries dropped."""
+        with self._lock:
+            doomed = [k for k in self._store
+                      if k == prefix
+                      or (isinstance(k, tuple) and k and k[0] == prefix)]
+            for k in doomed:
+                del self._store[k]
+            return len(doomed)
+
     def clear(self) -> None:
         with self._lock:
             self._store.clear()

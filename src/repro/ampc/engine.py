@@ -29,7 +29,9 @@ disabled/no-op paths that cost essentially nothing per solve.
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
+import threading
 import time
 from typing import Any, Dict, List, Optional, Sequence
 
@@ -40,8 +42,10 @@ from ..graph import batching
 from ..obs import metrics as obs_metrics
 from ..obs import trace as obs_trace
 from . import registry
+from .async_engine import AsyncEngineMixin
 from .backends import DhtBackend, resolve_backend
 from .cache import CacheInfo, SolverCache
+from .session import GraphSession
 
 
 def _field_eq(a, b) -> bool:
@@ -150,7 +154,7 @@ class BatchSolveContext:
                 batch.n_bucket, batch.m_bucket, *extra)
 
 
-class AmpcEngine:
+class AmpcEngine(AsyncEngineMixin):
     """Session object for AMPC graph solves.
 
     Parameters
@@ -172,6 +176,15 @@ class AmpcEngine:
                   every solve; ``None`` (default) keeps it on for ``solve``
                   and **off inside ``solve_many`` bucket loops**, so
                   long-lived serving sessions don't accumulate strings.
+    max_workers:  size of the async worker pool behind ``engine.submit``
+                  (lazy: no threads exist until the first submit).
+    queue_depth:  bound on the submit queue before ``submit`` blocks for
+                  backpressure; default ``2 * max_workers``.
+    serialize_launches: hold one engine-wide lock around every device
+                  launch, so concurrent async solves overlap host-side
+                  phases but never race on the device (the AMPC accounting
+                  model runs one materialized round at a time).  Disable
+                  only for experiments on multi-controller setups.
 
     >>> from repro.ampc import AmpcEngine
     >>> from repro.graph import generators as gen
@@ -194,11 +207,30 @@ class AmpcEngine:
     ('solve', 'mis')
     >>> [c.name for c in res.trace.children]
     ['shuffle:DirectEdges+WriteKV', 'shuffle:IsInMIS']
+
+    Async serving (``submit`` -> future) and snapshot reuse on one graph
+    (``session``; see ``repro.ampc.session``):
+
+    >>> with AmpcEngine(seed=0) as eng:
+    ...     g = gen.erdos_renyi(48, 3.0, seed=3)
+    ...     fut = eng.submit(g, "mis")
+    ...     async_res = fut.result(timeout=60)
+    ...     sess = eng.session(g)
+    ...     cold = sess.solve("mis")
+    ...     warm = sess.solve("matching")
+    >>> bool((async_res.output == cold.output).all())
+    True
+    >>> cold.stats["snapshot"]["hit"], warm.stats["snapshot"]["hit"]
+    (False, True)
+    >>> warm.ledger["shuffles"]   # the WriteKV shuffle was skipped
+    1
     """
 
     def __init__(self, mesh=None, dht_backend="local", epsilon: float = 0.5,
                  seed: int = 0, *, trace=None, metrics=None,
-                 record_events: Optional[bool] = None):
+                 record_events: Optional[bool] = None, max_workers: int = 4,
+                 queue_depth: Optional[int] = None,
+                 serialize_launches: bool = True):
         self.mesh = mesh
         self.dht = resolve_backend(dht_backend, mesh=mesh)
         self.epsilon = float(epsilon)
@@ -207,6 +239,12 @@ class AmpcEngine:
         self.metrics = obs_metrics.as_registry(metrics)
         self.record_events = record_events
         self._solver_cache = SolverCache(metrics=self.metrics)
+        # snapshot store for GraphSessions; separate from the solver cache
+        # so solver hit/miss accounting stays comparable across versions
+        self._snapshot_cache = SolverCache()
+        self._launch_lock = (threading.RLock() if serialize_launches
+                             else contextlib.nullcontext())
+        self._init_async(max_workers, queue_depth)
 
     # ------------------------------------------------------------------
     def _ledger(self, spec, record_events: bool) -> RoundLedger:
@@ -263,13 +301,17 @@ class AmpcEngine:
         tracer = self.tracer
         span = None
         t0 = time.perf_counter()
+        # the launch lock serializes device work across async workers; the
+        # wait for it is part of the solve span (device-contention time)
         if tracer.enabled:
             with tracer.span("solve", problem=spec.name, model=spec.model,
                              backend=self.dht.name, n=int(graph.n),
                              m=int(graph.m)) as span:
-                output, stats = spec.fn(ctx, graph, **opts)
+                with self._launch_lock:
+                    output, stats = spec.fn(ctx, graph, **opts)
         else:
-            output, stats = spec.fn(ctx, graph, **opts)
+            with self._launch_lock:
+                output, stats = spec.fn(ctx, graph, **opts)
         wall = time.perf_counter() - t0
         self._observe_solve(spec, wall, "solve")
         return AmpcResult(problem=spec.name, model=spec.model,
@@ -356,9 +398,11 @@ class AmpcEngine:
         t0 = time.perf_counter()
         if bspan is not None:
             with bspan:
-                outs = spec.batch_fn(bctx, batch, **opts)
+                with self._launch_lock:
+                    outs = spec.batch_fn(bctx, batch, **opts)
         else:
-            outs = spec.batch_fn(bctx, batch, **opts)
+            with self._launch_lock:
+                outs = spec.batch_fn(bctx, batch, **opts)
         wall = time.perf_counter() - t0
         assert len(outs) == len(batch), \
             f"batch adapter for {spec.name!r} returned {len(outs)} " \
@@ -388,18 +432,34 @@ class AmpcEngine:
                 trace=gspan)
 
     # ------------------------------------------------------------------
-    def cache_info(self) -> CacheInfo:
-        """Hit/miss/size counters of the compiled-solver cache.
+    def session(self, graph) -> GraphSession:
+        """A :class:`~repro.ampc.session.GraphSession` on ``graph``: solves
+        through it share one DHT graph-KV snapshot (built on first use,
+        reported in ``AmpcResult.stats["snapshot"]``)."""
+        return GraphSession(self, graph)
 
-        One miss per solver actually traced; one hit per graph served by an
+    def cache_info(self, kind: str = "solver") -> CacheInfo:
+        """Hit/miss/size counters of an engine cache.
+
+        ``kind="solver"`` (default): the compiled-solver cache — one miss
+        per solver actually traced; one hit per graph served by an
         already-traced solver (so a cold bucket of ``B`` graphs counts
-        ``1`` miss and ``B - 1`` hits).
+        ``1`` miss and ``B - 1`` hits).  ``kind="snapshot"``: the
+        GraphSession snapshot store — one miss per snapshot built, one hit
+        per solve that reused it.
         """
-        return self._solver_cache.info()
+        if kind == "solver":
+            return self._solver_cache.info()
+        if kind == "snapshot":
+            return self._snapshot_cache.info()
+        raise ValueError(
+            f"kind must be 'solver' or 'snapshot', got {kind!r}")
 
     def clear_cache(self) -> None:
-        """Drop every memoized solver and reset the hit/miss counters."""
+        """Drop every memoized solver and graph snapshot, and reset both
+        caches' hit/miss counters."""
         self._solver_cache.clear()
+        self._snapshot_cache.clear()
 
     def metrics_report(self) -> str:
         """Plain-text dump of this engine's metrics registry.

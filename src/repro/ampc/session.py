@@ -1,0 +1,156 @@
+"""``GraphSession`` — DHT snapshot reuse across solves on one graph.
+
+The first shuffle of every fixpoint-style AMPC solve is the same work: write
+the graph's KV representation into the DHT snapshot (the rank-directed
+symmetric adjacency for MIS, the edge list for the matching family).  A
+serving workload that answers several queries on one graph — the paper's
+"MIS then matching on one snapshot" pattern — repeats that write per solve
+even though the snapshot is immutable within a session.
+
+``engine.session(graph)`` returns a :class:`GraphSession` that materializes
+the graph KV snapshot **once**, on the first solve that needs it, and lets
+every later solve on the same graph hit it:
+
+    with AmpcEngine(seed=0) as eng:
+        sess = eng.session(g)
+        mis = sess.solve("mis")             # cold: writes the snapshot
+        mm = sess.solve("matching")         # warm: skips the WriteKV shuffle
+        vc = sess.solve("vertex-cover")     # warm
+        mm.stats["snapshot"]                # {"hit": True, ...}
+
+Accounting follows the :class:`~repro.ampc.cache.SolverCache` model the
+compiled-solver cache already uses: the snapshot store *is* a
+``SolverCache`` (1 miss for the build, 1 hit per solve that reuses it),
+surfaced engine-wide through ``engine.cache_info(kind="snapshot")`` and
+per-solve through ``AmpcResult.stats["snapshot"]``.  A warm solve records
+one fewer materialized round in its ledger (the WriteKV shuffle is the one
+it skipped), which is exactly the paper's claim for snapshot reuse: the
+adaptive in-round queries repeat, the shuffle does not.
+
+Invalidation: ``session.invalidate()`` (or mutating the graph and opening a
+new session) evicts the session's entries from the snapshot cache; the next
+solve rebuilds.  Sessions are keyed by identity, not content — two sessions
+on equal graphs build two snapshots, because the engine cannot know the
+caller keeps the arrays immutable.
+
+Problems outside :data:`SNAPSHOT_PROBLEMS` (msf, connectivity, one-vs-two —
+their first shuffle builds per-solve structures like ternarized adjacency,
+not a reusable KV image) run unchanged through a session; their stats
+report ``{"hit": False, "supported": False}``.
+"""
+from __future__ import annotations
+
+import itertools
+import threading
+from typing import Optional, TYPE_CHECKING
+
+import jax.numpy as jnp
+
+from ..core.rounds import nbytes_of
+from .cache import SolverCache
+
+if TYPE_CHECKING:  # pragma: no cover - import cycle guard
+    from .engine import AmpcEngine
+
+__all__ = ["GraphSession", "GraphSnapshot", "SNAPSHOT_PROBLEMS"]
+
+# problems whose first shuffle is the reusable graph-KV write
+SNAPSHOT_PROBLEMS = frozenset(
+    {"mis", "matching", "weighted-matching", "vertex-cover"})
+
+_session_ids = itertools.count(1)
+
+
+class GraphSnapshot:
+    """Lazy, cached device-side KV image of one graph.
+
+    ``materialize(ledger)`` returns ``(entries, hit)``: the dict of device
+    arrays every snapshot-aware solver reads (``sym_senders`` /
+    ``sym_receivers`` for vertex fixpoints, ``edge_u`` / ``edge_v`` for
+    edge fixpoints), and whether the image was already in the cache.  The
+    cold build runs under a ``WriteGraphKV`` shuffle on the *calling
+    solve's* ledger — the build cost is attributed to the solve that paid
+    it, and warm solves record no shuffle at all.
+    """
+
+    def __init__(self, graph, key, cache: SolverCache):
+        self.graph = graph
+        self.key = key
+        self._cache = cache
+
+    def materialize(self, ledger):
+        g = self.graph
+
+        def build():
+            # one write covers both the directed-adjacency and the
+            # edge-list views: a single snapshot serves MIS and the
+            # matching family alike
+            with ledger.shuffle("WriteGraphKV", nbytes_of(g.edges) * 3):
+                s, r, _, _ = g.symmetric()
+                return {
+                    "sym_senders": jnp.asarray(s),
+                    "sym_receivers": jnp.asarray(r),
+                    "edge_u": jnp.asarray(g.edges[:, 0]),
+                    "edge_v": jnp.asarray(g.edges[:, 1]),
+                }
+
+        entries, hit = self._cache.get_or_build((self.key, "graph_kv"), build)
+        return entries, hit
+
+    def stat(self, hit: bool) -> dict:
+        """The ``AmpcResult.stats["snapshot"]`` payload for one solve."""
+        return {"hit": bool(hit), "key": self.key, "supported": True}
+
+
+class GraphSession:
+    """Multi-solve handle on one graph; see the module docstring.
+
+    Thin by design: every solve still goes through ``engine.solve`` /
+    ``engine.submit`` (same ledgers, spans, metrics, retries) — the session
+    only threads the shared :class:`GraphSnapshot` into the solver and
+    annotates the result stats.
+    """
+
+    def __init__(self, engine: "AmpcEngine", graph):
+        self.engine = engine
+        self.graph = graph
+        self.key = ("snapshot", next(_session_ids))
+        self.snapshot = GraphSnapshot(graph, self.key,
+                                      engine._snapshot_cache)
+        self._lock = threading.Lock()
+
+    # ------------------------------------------------------------------
+    def _supported(self, problem: str) -> bool:
+        from . import registry
+        return registry.get(problem).name in SNAPSHOT_PROBLEMS
+
+    def solve(self, problem: str, **opts):
+        """``engine.solve(self.graph, problem)`` through the snapshot."""
+        if self._supported(problem):
+            res = self.engine.solve(self.graph, problem,
+                                    snapshot=self.snapshot, **opts)
+        else:
+            res = self.engine.solve(self.graph, problem, **opts)
+            res.stats.setdefault("snapshot",
+                                 {"hit": False, "supported": False})
+        return res
+
+    def submit(self, problem: str, **opts):
+        """Async variant: ``engine.submit`` with the session snapshot."""
+        if self._supported(problem):
+            return self.engine.submit(self.graph, problem,
+                                      snapshot=self.snapshot, **opts)
+        return self.engine.submit(self.graph, problem, **opts)
+
+    # ------------------------------------------------------------------
+    def invalidate(self) -> int:
+        """Evict this session's snapshot; the next solve rebuilds.
+
+        Call after mutating the graph's arrays in place.  Returns the
+        number of cache entries dropped (0 if never materialized).
+        """
+        return self.engine._snapshot_cache.evict(self.key)
+
+    def __repr__(self):
+        return (f"GraphSession(key={self.key!r}, n={self.graph.n}, "
+                f"m={self.graph.m})")

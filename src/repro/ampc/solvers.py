@@ -72,18 +72,35 @@ def _collect(dht, ledger, values, keys=None, dedup: bool = False):
 # ==========================================================================
 def mis_ampc(g: UGraph, seed: int = 0,
              ledger: Optional[RoundLedger] = None,
-             caching: bool = True, dht=None) -> Tuple[np.ndarray, dict]:
-    """Returns (in_mis bool(n,), stats)."""
+             caching: bool = True, dht=None,
+             snapshot=None) -> Tuple[np.ndarray, dict]:
+    """Returns (in_mis bool(n,), stats).
+
+    ``snapshot`` (a :class:`~repro.ampc.session.GraphSnapshot`) replaces
+    shuffle 1 with a read of the session's cached graph-KV image: cold it
+    records one ``WriteGraphKV`` shuffle, warm it records none — the rank
+    permutation is still drawn per solve, so outputs stay bit-identical to
+    the snapshot-free path.
+    """
     ledger = ledger if ledger is not None else RoundLedger("ampc_mis")
     n = g.n
     rng = np.random.default_rng(seed)
     rank = rng.permutation(n).astype(np.float32)
 
-    # shuffle 1: build the rank-directed graph, write to the DHT (Fig 1 step 1-2)
-    with ledger.shuffle("DirectEdges+WriteKV", nbytes_of(g.edges) * 2):
-        s, r, _, _ = g.symmetric()
-        senders = jnp.asarray(s); receivers = jnp.asarray(r)
+    snap_stat = None
+    if snapshot is not None:
+        entries, snap_hit = snapshot.materialize(ledger)
+        senders = entries["sym_senders"]
+        receivers = entries["sym_receivers"]
         jrank = jnp.asarray(rank)
+        snap_stat = snapshot.stat(snap_hit)
+    else:
+        # shuffle 1: build the rank-directed graph, write to the DHT
+        # (Fig 1 step 1-2)
+        with ledger.shuffle("DirectEdges+WriteKV", nbytes_of(g.edges) * 2):
+            s, r, _, _ = g.symmetric()
+            senders = jnp.asarray(s); receivers = jnp.asarray(r)
+            jrank = jnp.asarray(rank)
 
     # shuffle 2: IsInMIS search — adaptive queries against the snapshot
     with ledger.shuffle("IsInMIS", n * 4):
@@ -96,9 +113,12 @@ def mis_ampc(g: UGraph, seed: int = 0,
     ledger.record_queries(queries, queries * row_bytes, waves=it,
                           deduped_away=(qn - qd) if caching else 0)
     assert not (status == UNKNOWN).any()
-    return status == IN, {"fixpoint_iters": it, "queries_nodedup": qn,
-                          "queries_dedup": qd,
-                          "cache_savings_factor": qn / max(qd, 1)}
+    stats = {"fixpoint_iters": it, "queries_nodedup": qn,
+             "queries_dedup": qd,
+             "cache_savings_factor": qn / max(qd, 1)}
+    if snap_stat is not None:
+        stats["snapshot"] = snap_stat
+    return status == IN, stats
 
 
 def mis_mpc_rootset(g: UGraph, seed: int = 0,
@@ -147,12 +167,14 @@ def mis_mpc_rootset(g: UGraph, seed: int = 0,
 def mm_ampc(g: UGraph, seed: int = 0,
             ledger: Optional[RoundLedger] = None,
             caching: bool = True, erank: Optional[np.ndarray] = None,
-            dht=None) -> Tuple[np.ndarray, dict]:
+            dht=None, snapshot=None) -> Tuple[np.ndarray, dict]:
     """Greedy maximal matching over the rank permutation ``erank``.
 
     ``erank`` is the rank-injection point (Corollary 4.1): when omitted it
     is a fresh random permutation drawn from ``seed``; weighted matching
-    passes decreasing-weight ranks instead.  Returns (in_mm bool(m,), stats).
+    passes decreasing-weight ranks instead.  ``snapshot`` reuses a
+    session's cached graph-KV image in place of the ``SortEdges+WriteKV``
+    shuffle (see :func:`mis_ampc`).  Returns (in_mm bool(m,), stats).
     """
     ledger = ledger if ledger is not None else RoundLedger("ampc_mm")
     n, m = g.n, g.m
@@ -163,9 +185,16 @@ def mm_ampc(g: UGraph, seed: int = 0,
         erank = np.asarray(erank, np.float32)
         assert erank.shape == (m,), "erank must be one rank per edge"
 
-    with ledger.shuffle("SortEdges+WriteKV", nbytes_of(g.edges) * 2):
-        u = jnp.asarray(g.edges[:, 0]); v = jnp.asarray(g.edges[:, 1])
+    snap_stat = None
+    if snapshot is not None:
+        entries, snap_hit = snapshot.materialize(ledger)
+        u = entries["edge_u"]; v = entries["edge_v"]
         jrank = jnp.asarray(erank)
+        snap_stat = snapshot.stat(snap_hit)
+    else:
+        with ledger.shuffle("SortEdges+WriteKV", nbytes_of(g.edges) * 2):
+            u = jnp.asarray(g.edges[:, 0]); v = jnp.asarray(g.edges[:, 1])
+            jrank = jnp.asarray(erank)
 
     with ledger.shuffle("IsInMM", m):
         estatus_dev, iters, q0, q1 = _mm_fixpoint(
@@ -176,8 +205,11 @@ def mm_ampc(g: UGraph, seed: int = 0,
     queries = qd if caching else qn
     ledger.record_queries(queries, queries * 12, waves=it,
                           deduped_away=(qn - qd) if caching else 0)
-    return estatus == IN, {"fixpoint_iters": it, "queries_nodedup": qn,
-                           "queries_dedup": qd, "erank": erank}
+    stats = {"fixpoint_iters": it, "queries_nodedup": qn,
+             "queries_dedup": qd, "erank": erank}
+    if snap_stat is not None:
+        stats["snapshot"] = snap_stat
+    return estatus == IN, stats
 
 
 def mm_ampc_levels(g: UGraph, seed: int = 0,
@@ -319,7 +351,7 @@ def mm_mpc_rootset(g: UGraph, seed: int = 0,
 # ==========================================================================
 def mwm_greedy_ampc(g: UGraph, seed: int = 0,
                     ledger: Optional[RoundLedger] = None,
-                    dht=None) -> Tuple[np.ndarray, dict]:
+                    dht=None, snapshot=None) -> Tuple[np.ndarray, dict]:
     """1/2-approx maximum weight matching: greedy by decreasing weight
     (ties broken by a random permutation), via the AMPC MM fixpoint with
     weight-derived ranks injected through ``mm_ampc(erank=...)``.
@@ -331,16 +363,18 @@ def mwm_greedy_ampc(g: UGraph, seed: int = 0,
     order = np.argsort(np.lexsort((tie, -g.weights.astype(np.float64))))
     erank = order.astype(np.float32)
     ledger = ledger if ledger is not None else RoundLedger("ampc_mwm")
-    in_mm, st = mm_ampc(g, seed=seed, ledger=ledger, erank=erank, dht=dht)
+    in_mm, st = mm_ampc(g, seed=seed, ledger=ledger, erank=erank, dht=dht,
+                        snapshot=snapshot)
     w = float(g.weights[in_mm].sum())
     return in_mm, {"weight": w, **st}
 
 
 def vertex_cover_2approx(g: UGraph, seed: int = 0,
                          ledger: Optional[RoundLedger] = None,
-                         dht=None) -> Tuple[np.ndarray, dict]:
+                         dht=None, snapshot=None) -> Tuple[np.ndarray, dict]:
     """2-approx minimum vertex cover = endpoints of a maximal matching."""
-    in_mm, stats = mm_ampc(g, seed=seed, ledger=ledger, dht=dht)
+    in_mm, stats = mm_ampc(g, seed=seed, ledger=ledger, dht=dht,
+                           snapshot=snapshot)
     cover = np.zeros(g.n, bool)
     cover[g.edges[in_mm, 0]] = True
     cover[g.edges[in_mm, 1]] = True

@@ -65,6 +65,12 @@ ENGINE_METRICS: Dict[str, MetricDef] = {m.name: m for m in [
               "batched solvers actually traced/compiled"),
     MetricDef("retry_transients_total", "counter", ("marker",),
               "transient launch failures retried by runtime.retry"),
+    MetricDef("engine_async_submitted_total", "counter", ("problem",),
+              "futures accepted by AmpcEngine.submit"),
+    MetricDef("engine_async_cancelled_total", "counter", ("problem",),
+              "futures cancelled before their solve started"),
+    MetricDef("engine_async_inflight", "gauge", (),
+              "submitted futures not yet resolved (0 when the pool is idle)"),
 ]}
 
 

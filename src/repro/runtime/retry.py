@@ -22,8 +22,10 @@ timelines.
 """
 from __future__ import annotations
 
+import contextlib
 import logging
-from typing import Any, Callable, Optional
+import threading
+from typing import Any, Callable, List, Optional
 
 import jax
 
@@ -62,12 +64,60 @@ def _observe_retry(marker: str, attempt: int, retries: int,
         retries=retries, error=str(err)[:200])
 
 
+class _FaultPlan:
+    """One armed injection: fail the next ``times`` resilient calls."""
+
+    def __init__(self, marker: str, times: int):
+        self.marker = marker
+        self.times = times
+
+
+_fault_lock = threading.Lock()
+_fault_plans: List[_FaultPlan] = []
+
+
+@contextlib.contextmanager
+def inject_transients(marker: str = "preempted", times: int = 1):
+    """Test hook: make the next ``times`` :func:`resilient_call` attempts
+    fail with a synthetic transient error carrying ``marker``.
+
+    The failure is raised *inside* the protected call path, so it exercises
+    the real recovery machinery — ``retry_transients_total`` increments, the
+    WARN ``transient_retry`` event lands on the caller's open span, and with
+    ``times > _retries`` the exhaustion path surfaces the injected error.
+    Process-global (any thread's resilient call consumes the plan), so
+    pooled async solves are injectable from the submitting thread.
+    """
+    if marker not in _TRANSIENT_MARKERS:
+        raise ValueError(f"marker {marker!r} is not one of the transient "
+                         f"markers {_TRANSIENT_MARKERS}")
+    plan = _FaultPlan(marker, int(times))
+    with _fault_lock:
+        _fault_plans.append(plan)
+    try:
+        yield plan
+    finally:
+        with _fault_lock:
+            if plan in _fault_plans:
+                _fault_plans.remove(plan)
+
+
+def _maybe_inject() -> None:
+    with _fault_lock:
+        for plan in _fault_plans:
+            if plan.times > 0:
+                plan.times -= 1
+                raise ValueError(
+                    f"injected transient failure ({plan.marker})")
+
+
 def resilient_call(fn: Callable, *args, _retries: int = 2, **kwargs) -> Any:
     """Call ``fn`` (usually a jitted function); on a transient runtime
     failure, drop cached executables and retry (recompiles)."""
     attempt = 0
     while True:
         try:
+            _maybe_inject()
             return fn(*args, **kwargs)
         except ValueError as e:  # jaxlib surfaces XLA runtime errors as ValueError
             marker = transient_marker(e)

@@ -1,0 +1,338 @@
+"""Async engine battery: determinism under concurrency, fault injection,
+stress/shutdown, and GraphSession snapshot reuse.
+
+The concurrency claims the engine makes are only trustworthy under load:
+``submit`` results must be bit-identical to sequential ``solve`` for every
+batch-safe problem on both DHT backends, futures resolved out of submission
+order must still carry their own solve's ledger, injected transient faults
+must retry on the owning future's span (and exhaust into the original
+exception without wedging the pool), and a storm of submits + random
+cancellations + a mid-stream ``shutdown(drain=True)`` must neither deadlock
+nor drop or duplicate a result.
+"""
+import threading
+import time
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.ampc import AmpcEngine, SNAPSHOT_PROBLEMS, get_problem
+from repro.ampc.async_engine import CancelledError, FutureTimeout
+from repro.graph import generators as gen
+from repro.obs.metrics import MetricsRegistry
+from repro.obs.trace import Tracer
+from repro.runtime.retry import inject_transients
+
+BACKENDS = ["local", "routed"]
+# every problem with a registered batch adapter — the batch-safe set
+BATCH_SAFE = ["mis", "matching", "weighted-matching", "vertex-cover",
+              "connectivity", "one-vs-two"]
+
+# ledger keys that must match between async and sequential solves of the
+# same problem (wall/phase times legitimately differ per run)
+LEDGER_KEYS = ("algorithm", "shuffles", "bytes_shuffled", "dht_queries",
+               "dht_bytes", "dht_query_waves", "dedup_savings",
+               "dht_overflows")
+
+
+def _input_for(name):
+    spec = get_problem(name)
+    if spec.needs_cycles:
+        return gen.two_cycles(40)
+    g = gen.erdos_renyi(80, 3.0, seed=2)
+    return g.with_random_weights(3) if spec.needs_weights else g
+
+
+def _assert_same_output(a, b):
+    if isinstance(a, np.ndarray):
+        assert np.array_equal(a, b)
+    else:
+        assert a == b
+
+
+# =========================================================================
+# determinism under concurrency
+# =========================================================================
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_submit_bit_identical_to_solve(backend):
+    """All batch-safe problems in flight at once == their sequential runs."""
+    with AmpcEngine(dht_backend=backend, seed=0, max_workers=4) as eng:
+        futures = {name: eng.submit(_input_for(name), name)
+                   for name in BATCH_SAFE}
+        sequential = {name: eng.solve(_input_for(name), name)
+                      for name in BATCH_SAFE}
+        for name, fut in futures.items():
+            res = fut.result(timeout=300)
+            _assert_same_output(res.output, sequential[name].output)
+            assert res.problem == sequential[name].problem
+            assert res.backend == backend
+
+
+def test_out_of_order_results_keep_their_ledgers():
+    """Futures read in reverse submission order still attribute the right
+    per-solve ledger (shuffle/query accounting is per future, not FIFO)."""
+    with AmpcEngine(seed=0, max_workers=3) as eng:
+        futs = [eng.submit(_input_for(name), name) for name in BATCH_SAFE]
+        seq = {name: eng.solve(_input_for(name), name)
+               for name in BATCH_SAFE}
+        for name, fut in reversed(list(zip(BATCH_SAFE, futs))):
+            res = fut.result(timeout=300)
+            for k in LEDGER_KEYS:
+                assert res.ledger[k] == seq[name].ledger[k], \
+                    f"{name}: ledger[{k!r}] diverged async vs sequential"
+            assert res.stats["async"]["future"] == fut.future_id
+
+
+def test_submit_many_parity_and_backpressure():
+    """submit_many under a tiny bounded queue: backpressure paces the
+    producer but every future still resolves with the sequential output."""
+    graphs = [gen.erdos_renyi(60, 3.0, seed=s) for s in range(6)]
+    with AmpcEngine(seed=0, max_workers=1, queue_depth=1) as eng:
+        futs = eng.submit_many(graphs, "mis")
+        want = [eng.solve(g, "mis") for g in graphs]
+        for fut, w in zip(futs, want):
+            assert np.array_equal(fut.result(timeout=300).output, w.output)
+
+
+def test_deadline_missed_in_queue_times_out():
+    with AmpcEngine(seed=0, max_workers=1) as eng:
+        fut = eng.submit(_input_for("mis"), "mis", timeout=-1.0)
+        with pytest.raises(FutureTimeout):
+            fut.result(timeout=60)
+
+
+def test_cancel_semantics():
+    """cancel() wins only while queued; either way the future is coherent."""
+    g = _input_for("mis")
+    with AmpcEngine(seed=0, max_workers=1) as eng:
+        blocker = eng.submit(g, "mis")          # occupies the single worker
+        target = eng.submit(g, "mis")
+        won = target.cancel()
+        assert target.cancel() is False or won  # second cancel never "wins"
+        if won:
+            assert target.cancelled() and target.done()
+            with pytest.raises(CancelledError):
+                target.result(timeout=60)
+        else:  # solve already started; it must complete normally
+            assert np.array_equal(target.result(timeout=300).output,
+                                  eng.solve(g, "mis").output)
+        blocker.result(timeout=300)
+
+
+# =========================================================================
+# fault injection through runtime/retry
+# =========================================================================
+def test_injected_transient_retries_and_succeeds():
+    g = _input_for("matching")
+    with AmpcEngine(seed=0) as eng:
+        want = eng.solve(g, "matching")
+        with inject_transients(marker="preempted", times=1):
+            res = eng.submit(g, "matching").result(timeout=300)
+        assert np.array_equal(res.output, want.output)
+        # the result's ledger describes exactly the successful attempt
+        for k in LEDGER_KEYS:
+            assert res.ledger[k] == want.ledger[k]
+
+
+def test_retry_metric_and_warn_event_on_owning_span():
+    reg = MetricsRegistry()
+    tracer = Tracer()
+    g = _input_for("mis")
+    # retry reports to the *process* registry by design; read the delta
+    from repro.obs.metrics import default_registry
+    ctr = default_registry().counter("retry_transients_total",
+                                     labelnames=("marker",))
+    before = ctr.value(marker="RESOURCE_EXHAUSTED")
+    with AmpcEngine(seed=0, trace=tracer, metrics=reg) as eng:
+        with inject_transients(marker="RESOURCE_EXHAUSTED", times=1):
+            fut = eng.submit(g, "mis")
+            res = fut.result(timeout=300)
+    assert ctr.value(marker="RESOURCE_EXHAUSTED") == before + 1
+    span = res.trace
+    assert span.name == "solve[async]"
+    assert span.attributes["future"] == fut.future_id
+    warns = [e for e in span.events if e.name == "transient_retry"]
+    assert len(warns) == 1 and warns[0].level == "WARN"
+    assert warns[0].attributes["marker"] == "RESOURCE_EXHAUSTED"
+    # the queue wait is an event on the same owning span
+    assert [e.name for e in span.events if e.name == "queue_wait"]
+
+
+def test_exhausted_retries_surface_original_error_without_wedging():
+    g = _input_for("mis")
+    with AmpcEngine(seed=0) as eng:
+        want = eng.solve(g, "mis")
+        with inject_transients(marker="preempted", times=10):
+            fut = eng.submit(g, "mis", retries=2)
+            with pytest.raises(ValueError, match="injected transient"):
+                fut.result(timeout=300)
+        assert fut.done() and not fut.cancelled()
+        # pool still serves: the very next submit resolves normally
+        res = eng.submit(g, "mis").result(timeout=300)
+        assert np.array_equal(res.output, want.output)
+
+
+# =========================================================================
+# stress: threads x submits x cancellations x mid-stream shutdown
+# =========================================================================
+def test_stress_no_deadlock_no_drops_inflight_returns_to_zero():
+    N_THREADS, M_SUBMITS = 4, 6
+    reg = MetricsRegistry()
+    graphs = {s: gen.erdos_renyi(48, 3.0, seed=s) for s in range(4)}
+    eng = AmpcEngine(seed=0, metrics=reg, max_workers=3, queue_depth=2)
+    expected = {s: eng.solve(g, "mis").output for s, g in graphs.items()}
+    collected = []        # (graph_seed, future)
+    refused = []          # submits rejected by the closing engine
+    lock = threading.Lock()
+
+    def producer(tid):
+        rng = np.random.default_rng(tid)
+        for i in range(M_SUBMITS):
+            s = int(rng.integers(len(graphs)))
+            try:
+                fut = eng.submit(graphs[s], "mis")
+            except RuntimeError:
+                with lock:
+                    refused.append((tid, i))
+                continue
+            if rng.random() < 0.3:
+                fut.cancel()
+            with lock:
+                collected.append((s, fut))
+
+    threads = [threading.Thread(target=producer, args=(t,))
+               for t in range(N_THREADS)]
+    t0 = time.monotonic()
+    for t in threads:
+        t.start()
+    time.sleep(0.05)                      # let the storm develop
+    eng.shutdown(drain=True, timeout=300)  # forced mid-stream
+    for t in threads:
+        t.join(timeout=300)
+        assert not t.is_alive(), "producer wedged on a shut-down engine"
+
+    seen = set()
+    for s, fut in collected:
+        assert id(fut) not in seen, "duplicated future"
+        seen.add(id(fut))
+        try:
+            res = fut.result(timeout=300)   # bounded: no deadlock
+        except CancelledError:
+            assert fut.cancelled()
+            continue
+        assert np.array_equal(res.output, expected[s]), \
+            "result attributed to the wrong graph"
+    assert time.monotonic() - t0 < 600, "stress test exceeded wall bound"
+    # every accepted future reached a terminal state -> gauge back to 0
+    assert reg.gauge("engine_async_inflight").value() == 0
+    # a submit refused while blocked on a full queue was already counted
+    # (and then cancelled), so submitted sits between the two bounds
+    submitted = reg.counter("engine_async_submitted_total",
+                            labelnames=("problem",)).value(problem="mis")
+    assert len(collected) <= submitted <= len(collected) + len(refused)
+    assert len(collected) + len(refused) == N_THREADS * M_SUBMITS
+
+
+def test_shutdown_drain_false_cancels_queued():
+    g = _input_for("mis")
+    reg = MetricsRegistry()
+    with AmpcEngine(seed=0, metrics=reg, max_workers=1,
+                    queue_depth=8) as eng:
+        futs = [eng.submit(g, "mis") for _ in range(5)]
+        eng.shutdown(drain=False, timeout=300)
+        outcomes = {"done": 0, "cancelled": 0}
+        for fut in futs:
+            try:
+                fut.result(timeout=300)
+                outcomes["done"] += 1
+            except CancelledError:
+                outcomes["cancelled"] += 1
+        assert outcomes["done"] + outcomes["cancelled"] == 5
+        assert reg.gauge("engine_async_inflight").value() == 0
+        cancelled = reg.counter("engine_async_cancelled_total",
+                                labelnames=("problem",)).value(problem="mis")
+        assert cancelled == outcomes["cancelled"]
+    with pytest.raises(RuntimeError):
+        eng.submit(g, "mis")
+    eng.shutdown()  # idempotent
+
+
+# =========================================================================
+# GraphSession snapshot reuse
+# =========================================================================
+def test_session_snapshot_hit_skips_writekv_shuffle():
+    g = gen.erdos_renyi(80, 3.0, seed=2)
+    tracer = Tracer()
+    with AmpcEngine(seed=0, trace=tracer) as eng:
+        sess = eng.session(g)
+        cold = sess.solve("mis")
+        warm = sess.solve("matching")
+        warm2 = sess.solve("vertex-cover")
+    assert cold.stats["snapshot"] == {"hit": False, "key": sess.key,
+                                      "supported": True}
+    assert warm.stats["snapshot"]["hit"] and warm2.stats["snapshot"]["hit"]
+    # ledger: the cold solve pays the WriteGraphKV shuffle, warm solves
+    # skip the rebuild entirely (1 shuffle instead of the sequential 2)
+    assert cold.ledger["shuffles"] == 2
+    assert warm.ledger["shuffles"] == 1 and warm2.ledger["shuffles"] == 1
+    # span structure agrees with the ledger counts
+    assert [c.name for c in cold.trace.children
+            if c.name.startswith("shuffle:")][0] == "shuffle:WriteGraphKV"
+    warm_shuffles = [c.name for c in warm.trace.children
+                     if c.name.startswith("shuffle:")]
+    assert warm_shuffles == ["shuffle:IsInMM"]
+    info = eng.cache_info(kind="snapshot")
+    assert (info.misses, info.hits, info.size) == (1, 2, 1)
+
+
+def test_session_invalidate_rebuilds():
+    g = gen.erdos_renyi(60, 3.0, seed=3)
+    with AmpcEngine(seed=0) as eng:
+        sess = eng.session(g)
+        sess.solve("mis")
+        assert sess.invalidate() == 1
+        res = sess.solve("matching")
+        assert res.stats["snapshot"]["hit"] is False
+        assert res.ledger["shuffles"] == 2
+        assert sess.invalidate() == 1 and sess.invalidate() == 0
+
+
+def test_session_unsupported_problem_passes_through():
+    g = gen.erdos_renyi(60, 3.0, seed=3).with_random_weights(3)
+    with AmpcEngine(seed=0) as eng:
+        res = eng.session(g).solve("msf", skip_ternarize_if_dense=False)
+        assert res.stats["snapshot"] == {"hit": False, "supported": False}
+        want = eng.solve(g, "msf", skip_ternarize_if_dense=False)
+        assert np.array_equal(res.output, want.output)
+    assert "msf" not in SNAPSHOT_PROBLEMS
+
+
+def test_session_async_submit_shares_snapshot():
+    g = gen.erdos_renyi(60, 3.0, seed=4)
+    with AmpcEngine(seed=0) as eng:
+        sess = eng.session(g)
+        sess.solve("mis")                         # materialize
+        res = sess.submit("matching").result(timeout=300)
+        assert res.stats["snapshot"]["hit"] is True
+        assert np.array_equal(res.output, eng.solve(g, "matching").output)
+
+
+SESSION_PROBLEMS = sorted(SNAPSHOT_PROBLEMS)
+
+
+@settings(max_examples=5, deadline=None)
+@given(st.lists(st.integers(0, len(SESSION_PROBLEMS) - 1),
+                min_size=1, max_size=5))
+def test_property_session_equals_fresh_engine(seq):
+    """Any sequence of solves on one GraphSession == fresh-engine solves."""
+    g = gen.erdos_renyi(50, 3.0, seed=7).with_random_weights(3)
+    with AmpcEngine(seed=0) as eng:
+        sess = eng.session(g)
+        for idx in seq:
+            name = SESSION_PROBLEMS[idx]
+            got = sess.solve(name)
+            want = AmpcEngine(seed=0).solve(g, name)
+            assert np.array_equal(got.output, want.output)
+            assert got.stats["snapshot"]["supported"] is True

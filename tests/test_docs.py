@@ -146,6 +146,31 @@ def test_architecture_ledger_metric_map_resolves():
         assert metric in ENGINE_METRICS, f"unknown metric {metric!r}"
 
 
+def test_async_serving_docs_in_sync():
+    """The Async serving docs must name the real engine surface, and the
+    ampc README's snapshot-problem list must match SNAPSHOT_PROBLEMS."""
+    from repro.ampc import AmpcEngine, SNAPSHOT_PROBLEMS
+
+    arch = (REPO / "docs" / "architecture.md").read_text()
+    m = re.search(r"^##\s+Async serving\s*$(.*?)(?=^##\s|\Z)", arch,
+                  re.S | re.M)
+    assert m, "Async serving section missing from docs/architecture.md"
+    section = m.group(1)
+    for token in ("submit", "shutdown", "session", "cache_info",
+                  "engine_async_inflight", "solve[async]", "queue_wait",
+                  "WriteGraphKV"):
+        assert token in section, f"{token!r} missing from Async serving docs"
+    for api in ("submit", "submit_many", "shutdown", "session"):
+        assert callable(getattr(AmpcEngine, api)), api
+    readme_section = _section(
+        AMPC_README.read_text(),
+        "Async serving: `submit` and `GraphSession`")
+    for name in sorted(SNAPSHOT_PROBLEMS):
+        assert f"`{name}`" in readme_section, (
+            f"snapshot-aware problem {name!r} missing from the ampc "
+            "README's Async serving section")
+
+
 def test_benchmark_registry_docstring_matches_dispatch():
     """benchmarks/registry.py documents the @bench contract; the registered
     specs must actually follow it (run(**kwargs) plus quick_kwargs that the
