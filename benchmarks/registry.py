@@ -42,8 +42,8 @@ def bench(name: str, *, takes_graphs: bool = False,
 def load_all():
     """Import every benchmark module so decorators run; returns REGISTRY."""
     from . import (table3_rounds, bytes_comm, mis_caching, runtimes,  # noqa
-                   msf_queries, solve_many, gnn_dht_hillclimb,        # noqa
-                   profile_cell, roofline)                            # noqa
+                   msf_queries, solve_many, dht_hot_path,             # noqa
+                   gnn_dht_hillclimb, profile_cell, roofline)         # noqa
     return REGISTRY
 
 

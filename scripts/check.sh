@@ -37,6 +37,9 @@ else
     echo "== ruff not installed; skipping lint"
 fi
 
+echo "== host-sync lint (hot-path modules must stay dispatch-only)"
+python scripts/lint_host_sync.py
+
 echo "== tier-1 pytest"
 export PYTHONPATH=src
 if [[ "${1:-}" == "--fast" ]]; then

@@ -1,0 +1,97 @@
+#!/usr/bin/env python
+"""Fail if a hot-path module re-introduces a host synchronization.
+
+The deferred-accounting contract (docs/architecture.md, "Accounting model")
+is that a warm solve's hot path is dispatch-only: every device->host
+transfer is deferred into the single per-solve ``RoundLedger.harvest``.
+That contract is easy to erode one innocent ``int(counter)`` at a time, so
+this linter greps the hot-path modules for the synchronizing idioms JAX
+offers and fails the check when one appears outside an explicit allowlist
+comment.
+
+Flagged idioms (substring match, per line):
+
+  * ``device_get``        — jax.device_get blocks on the transfer
+  * ``.item()``           — DeviceArray.item() is a transfer
+  * ``int(jnp``           — int()/float() on a traced/device value syncs
+  * ``float(jnp``
+  * ``block_until_ready`` — an explicit barrier
+
+A line that genuinely must sync (e.g. the eager-ledger compatibility path)
+carries a ``# host-sync: ok`` comment with a short justification; the
+linter skips those lines but still counts them, so the report shows how
+many sanctioned syncs exist.
+
+Usage: ``python scripts/lint_host_sync.py`` (repo root or anywhere).
+Exit 0 when clean, 1 with a file:line report otherwise.
+"""
+from __future__ import annotations
+
+import pathlib
+import sys
+
+REPO = pathlib.Path(__file__).resolve().parent.parent
+
+# The modules a warm solve's per-round work flows through.  Solver driver
+# loops (ampc/solvers.py eager fallbacks, mpc rootset simulators) keep
+# genuine host control flow and are accounted for at the harvest instead.
+HOT_PATH_MODULES = [
+    "src/repro/core/dht.py",
+    "src/repro/core/mis.py",
+    "src/repro/core/matching.py",
+    "src/repro/core/weighted_matching.py",
+    "src/repro/core/connectivity.py",
+    "src/repro/core/one_vs_two.py",
+    "src/repro/ampc/backends.py",
+]
+
+SYNC_IDIOMS = [
+    "device_get",
+    ".item()",
+    "int(jnp",
+    "float(jnp",
+    "block_until_ready",
+]
+
+ALLOW_MARK = "# host-sync: ok"
+
+
+def lint_file(path: pathlib.Path):
+    """Return (violations, allowed) lists of (lineno, line, idiom)."""
+    violations, allowed = [], []
+    for lineno, line in enumerate(path.read_text().splitlines(), 1):
+        hit = next((idiom for idiom in SYNC_IDIOMS if idiom in line), None)
+        if hit is None:
+            continue
+        (allowed if ALLOW_MARK in line else violations).append(
+            (lineno, line.strip(), hit))
+    return violations, allowed
+
+
+def main(argv=None) -> int:
+    failures = 0
+    sanctioned = 0
+    for rel in HOT_PATH_MODULES:
+        path = REPO / rel
+        if not path.exists():
+            print(f"lint_host_sync: missing hot-path module {rel}",
+                  file=sys.stderr)
+            failures += 1
+            continue
+        violations, allowed = lint_file(path)
+        sanctioned += len(allowed)
+        for lineno, line, idiom in violations:
+            print(f"{rel}:{lineno}: host sync `{idiom}` in hot path "
+                  f"(annotate `{ALLOW_MARK} -- why` if intentional)\n"
+                  f"    {line}", file=sys.stderr)
+            failures += 1
+    if failures:
+        print(f"lint_host_sync: {failures} violation(s)", file=sys.stderr)
+        return 1
+    print(f"lint_host_sync: clean ({len(HOT_PATH_MODULES)} modules, "
+          f"{sanctioned} sanctioned sync(s))")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

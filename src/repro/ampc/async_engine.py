@@ -33,6 +33,12 @@ A future resolves with the same :class:`AmpcResult` a sequential
 ``engine.solve`` call returns — bit-identical outputs, its own per-solve
 ``RoundLedger`` — plus ``stats["async"]`` carrying the queue wait and
 worker attribution.
+
+Deferred accounting matters most here: each worker's solve performs exactly
+one ``jax.device_get`` harvest at result-materialization time, so a solve
+holding the launch lock never stalls the pipeline on per-lookup counter
+syncs — the next queued solve's host-side phases overlap with the previous
+solve's device work all the way up to its single harvest.
 """
 from __future__ import annotations
 

@@ -22,6 +22,7 @@ from typing import Optional, Protocol, runtime_checkable
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from ..core.dht import ShardedDHT
 from ..core.rounds import RoundLedger
@@ -107,24 +108,31 @@ class _BackendBase:
         if key_mask is not None:
             flat_keys = jnp.where(jnp.asarray(key_mask), flat_keys, -1)
         # scratch ledger: captures the exchange's overflow count without
-        # double-recording the query totals we re-attribute per graph below
-        scratch = RoundLedger("lookup_many")
+        # double-recording the query totals we re-attribute per graph
+        # below.  deferred=True keeps it a raw device scalar — nothing
+        # here touches the host; the per-graph ledgers decide when.
+        scratch = RoundLedger("lookup_many", deferred=True)
         snap = self.snapshot(flat_vals, ledger=scratch,
                              value_bytes=value_bytes)
         out = snap.lookup(flat_keys.reshape(-1), dedup=dedup)
         out = out.reshape((B, keys.shape[1]) + out.shape[1:])
         if ledgers is not None:
+            pending = scratch.device.drain()
+            # record layout: (queries, nbytes, waves, deduped_away, overflow)
+            overflow = pending[-1][0][4] if pending else 0
             if key_mask is None:
                 counts = [int(keys.shape[1])] * B
+            elif isinstance(key_mask, jax.Array):
+                counts = list(jnp.sum(key_mask, axis=1))  # stays on device
             else:
-                counts = [int(c) for c in
-                          jnp.asarray(key_mask).sum(axis=1).tolist()]
+                counts = [int(c) for c in np.sum(np.asarray(key_mask),
+                                                 axis=1)]
             row_bytes = value_bytes or snap._row_bytes
             for ledger, cnt in zip(ledgers, counts):
                 if ledger is not None:
-                    ledger.record_queries(cnt, cnt * (row_bytes + 4),
-                                          waves=1,
-                                          overflow=scratch.dht_overflows)
+                    ledger.record_queries_deferred(
+                        cnt, cnt * (row_bytes + 4), waves=1,
+                        overflow=overflow)
         return out
 
 

@@ -185,6 +185,13 @@ class AmpcEngine(AsyncEngineMixin):
                   phases but never race on the device (the AMPC accounting
                   model runs one materialized round at a time).  Disable
                   only for experiments on multi-controller setups.
+    deferred_accounting: ``True`` (default) → per-solve ledgers queue DHT
+                  counters on the device and the solve performs exactly one
+                  ``jax.device_get`` harvest at result materialization
+                  (once per bucket under ``solve_many``); counter values
+                  and traces are bit-identical to the eager path.
+                  ``False`` → the pre-deferral behavior: every lookup
+                  syncs its counts to the host immediately.
 
     >>> from repro.ampc import AmpcEngine
     >>> from repro.graph import generators as gen
@@ -230,11 +237,13 @@ class AmpcEngine(AsyncEngineMixin):
                  seed: int = 0, *, trace=None, metrics=None,
                  record_events: Optional[bool] = None, max_workers: int = 4,
                  queue_depth: Optional[int] = None,
-                 serialize_launches: bool = True):
+                 serialize_launches: bool = True,
+                 deferred_accounting: bool = True):
         self.mesh = mesh
         self.dht = resolve_backend(dht_backend, mesh=mesh)
         self.epsilon = float(epsilon)
         self.seed = int(seed)
+        self.deferred_accounting = bool(deferred_accounting)
         self.tracer = obs_trace.as_tracer(trace)
         self.metrics = obs_metrics.as_registry(metrics)
         self.record_events = record_events
@@ -252,7 +261,8 @@ class AmpcEngine(AsyncEngineMixin):
         return RoundLedger(
             f"{spec.model}_{spec.name}",
             tracer=tracer if tracer.enabled else None,
-            metrics=self.metrics, record_events=record_events)
+            metrics=self.metrics, record_events=record_events,
+            deferred=self.deferred_accounting)
 
     def _observe_solve(self, spec, wall: float, mode: str) -> None:
         m = self.metrics
@@ -383,7 +393,8 @@ class AmpcEngine(AsyncEngineMixin):
         # B copies of every shuffle span — the per-graph share is attached
         # retroactively below, from each ledger's phase_times.
         ledgers = [RoundLedger(f"{spec.model}_{spec.name}",
-                               metrics=self.metrics, record_events=rec)
+                               metrics=self.metrics, record_events=rec,
+                               deferred=self.deferred_accounting)
                    for _ in range(len(batch))]
         bctx = BatchSolveContext(
             ledgers=ledgers, dht=self.dht,

@@ -37,6 +37,12 @@ Problems outside :data:`SNAPSHOT_PROBLEMS` (msf, connectivity, one-vs-two —
 their first shuffle builds per-solve structures like ternarized adjacency,
 not a reusable KV image) run unchanged through a session; their stats
 report ``{"hit": False, "supported": False}``.
+
+Session solves inherit the engine's deferred accounting: warm solves stay
+host-sync free until the single per-solve ledger harvest (see
+``RoundLedger.harvest`` and the "Accounting model" section of
+docs/architecture.md), so snapshot reuse composes with the one-transfer
+hot path rather than re-introducing per-lookup syncs.
 """
 from __future__ import annotations
 

@@ -38,7 +38,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..graph.coo import UGraph
-from ..core.rounds import RoundLedger, nbytes_of
+from ..core.rounds import RoundLedger, harvest_many, nbytes_of
 from ..core.ternarize import ternarize
 from ..core.mis import _mis_fixpoint, _mis_fixpoint_masked, IN, OUT, UNKNOWN
 from ..core.matching import _mm_fixpoint, _mm_wave, BIGF
@@ -52,19 +52,21 @@ from . import registry
 from .registry import batched_impl, problem
 
 
-def _collect(dht, ledger, values, keys=None, dedup: bool = False):
+def _collect_dev(dht, ledger, values, keys=None, dedup: bool = False):
     """CollectOutputs: read an output snapshot back through the DHT backend.
 
-    ``dht=None`` (legacy call sites) degrades to a plain device_get.  With a
-    backend, the read is a genuine lookup (local gather or routed
-    all_to_all) whose queries/bytes land in the ledger.
+    ``dht=None`` (legacy call sites) returns the device array unchanged.
+    With a backend, the read is a genuine lookup (local gather or routed
+    all_to_all) whose queries/bytes land in the ledger — as deferred
+    device records under a ``deferred`` ledger.  The result stays on the
+    device: the caller materializes it through the solve's single
+    :meth:`RoundLedger.harvest`.
     """
     if dht is None:
-        return np.asarray(jax.device_get(values))
+        return values
     if keys is None:
         keys = jnp.arange(values.shape[0], dtype=jnp.int32)
-    out = dht.lookup(values, keys, ledger=ledger, dedup=dedup)
-    return np.asarray(jax.device_get(out))
+    return dht.lookup(values, keys, ledger=ledger, dedup=dedup)
 
 
 # ==========================================================================
@@ -105,9 +107,11 @@ def mis_ampc(g: UGraph, seed: int = 0,
     # shuffle 2: IsInMIS search — adaptive queries against the snapshot
     with ledger.shuffle("IsInMIS", n * 4):
         status_dev, iters, q0, q1 = _mis_fixpoint(senders, receivers, jrank, n)
-        status = _collect(dht, ledger, status_dev)
-        it = int(jax.device_get(iters))
-        qn = int(jax.device_get(q0)); qd = int(jax.device_get(q1))
+        out_dev = _collect_dev(dht, ledger, status_dev)
+        # the solve's one transfer: outputs + every deferred counter record
+        status, it, qn, qd = ledger.harvest((out_dev, iters, q0, q1))
+        status = np.asarray(status)
+        it, qn, qd = int(it), int(qn), int(qd)
     queries = qd if caching else qn
     row_bytes = 8  # nodeid + status
     ledger.record_queries(queries, queries * row_bytes, waves=it,
@@ -199,9 +203,10 @@ def mm_ampc(g: UGraph, seed: int = 0,
     with ledger.shuffle("IsInMM", m):
         estatus_dev, iters, q0, q1 = _mm_fixpoint(
             u, v, jrank, n, jnp.zeros((m,), jnp.int32))
-        estatus = _collect(dht, ledger, estatus_dev)
-        it = int(jax.device_get(iters))
-        qn = int(jax.device_get(q0)); qd = int(jax.device_get(q1))
+        out_dev = _collect_dev(dht, ledger, estatus_dev)
+        estatus, it, qn, qd = ledger.harvest((out_dev, iters, q0, q1))
+        estatus = np.asarray(estatus)
+        it, qn, qd = int(it), int(qn), int(qd)
     queries = qd if caching else qn
     ledger.record_queries(queries, queries * 12, waves=it,
                           deduped_away=(qn - qd) if caching else 0)
@@ -402,9 +407,10 @@ def msf_ampc(g: UGraph, epsilon: float = 0.5, seed: int = 0,
         valid = jnp.ones((m,), bool)
         with ledger.shuffle("DenseMSF", nbytes_of(g.edges, g.weights)):
             mask_dev, _, phases = boruvka_inround(u, v, w, eid, valid, n, m)
-            mask = _collect(dht, ledger, mask_dev.astype(jnp.int32)) \
-                .astype(bool)
-        return mask, {"phases": int(jax.device_get(phases)), "path": "dense"}
+            col_dev = _collect_dev(dht, ledger, mask_dev.astype(jnp.int32))
+            mask, phases_h = ledger.harvest((col_dev, phases))
+            mask = np.asarray(mask).astype(bool)
+        return mask, {"phases": int(phases_h), "path": "dense"}
 
     # --- shuffle 1: SortGraph (ternarize + build sorted adjacency, write DHT)
     with ledger.shuffle("SortGraph", nbytes_of(g.edges, g.weights)):
@@ -421,16 +427,16 @@ def msf_ampc(g: UGraph, epsilon: float = 0.5, seed: int = 0,
     with ledger.shuffle("PrimSearch", 0):
         out_eids, hooks, cases, queries = truncated_prim(
             jn_nbr, jn_nbw, jn_nbe, jn_rank, budget)
-        total_q = int(jax.device_get(queries.sum()))
+        q_sum = queries.sum()
     row_bytes = 3 * (4 + 4 + 4)
-    ledger.record_queries(total_q, total_q * row_bytes, waves=1)
+    ledger.record_queries_deferred(q_sum, q_sum * row_bytes, waves=1)
 
     # --- shuffle 3: PointerJump (contract the hook forest, Prop 3.2)
-    with ledger.shuffle("PointerJump", nbytes_of(np.asarray(hooks))):
+    with ledger.shuffle("PointerJump", nbytes_of(hooks)):
         parent = jnp.where(hooks >= 0, hooks, jnp.arange(nt, dtype=jnp.int32))
         roots, jump_iters = pointer_jump(parent)
-    ledger.record_queries(int(jax.device_get(jump_iters)) * nt,
-                          int(jax.device_get(jump_iters)) * nt * 4, waves=1)
+    ledger.record_queries_deferred(jump_iters * nt, jump_iters * nt * 4,
+                                   waves=1)
 
     # --- shuffle 4: Contract (relabel + dedup on the ternarized edge list)
     tu = jnp.asarray(tg.g.edges[:, 0]); tv = jnp.asarray(tg.g.edges[:, 1])
@@ -438,34 +444,40 @@ def msf_ampc(g: UGraph, epsilon: float = 0.5, seed: int = 0,
     with ledger.shuffle("Contract", nbytes_of(tg.g.edges, tg.g.weights)):
         cu, cv, cw, ceid, cvalid, live = contract_edges(
             tu, tv, tw, teid, jnp.ones((tg.g.m,), bool), roots)
-        live_v = int(jax.device_get(live))
 
-    # --- shuffle 5: DenseMSF on the contracted graph
+    # --- shuffle 5: DenseMSF on the contracted graph, then the solve's
+    # single harvest: every output array and deferred counter, one transfer
     with ledger.shuffle("DenseMSF", 0):
         dmask_dev, dlabels, phases = boruvka_inround(cu, cv, cw, ceid, cvalid,
                                                      nt, max(m, 1))
-        dmask = _collect(dht, ledger, dmask_dev.astype(jnp.int32)).astype(bool)
+        col_dev = _collect_dev(dht, ledger, dmask_dev.astype(jnp.int32))
+        (dmask, eids_h, q_h, jump_h, live_h, phases_h, cases_h) = \
+            ledger.harvest((col_dev, out_eids, q_sum, jump_iters, live,
+                            phases, cases))
+        dmask = np.asarray(dmask).astype(bool)
+    total_q = int(q_h)
 
     # union of Prim-discovered edges and the dense-phase edges
-    prim_eids = np.asarray(jax.device_get(out_eids)).ravel()
+    prim_eids = np.asarray(eids_h).ravel()
     prim_eids = prim_eids[prim_eids >= 0]
     orig = tg.orig_eid[prim_eids]
     orig = orig[orig >= 0]
     mask = dmask.copy()
     if m:
         mask[orig] = True
+    live_v = int(live_h)
     stats = {
         "path": "sparse",
         "budget": budget,
         "n_tern": nt,
         "queries": total_q,
         "avg_queries_per_vertex": total_q / max(nt, 1),
-        "pointer_jump_iters": int(jax.device_get(jump_iters)),
+        "pointer_jump_iters": int(jump_h),
         "contracted_vertices": live_v,
         "shrink_factor": nt / max(live_v, 1),
-        "dense_phases": int(jax.device_get(phases)),
+        "dense_phases": int(phases_h),
         "stop_cases": {int(k): int(c) for k, c in zip(
-            *np.unique(np.asarray(jax.device_get(cases)), return_counts=True))},
+            *np.unique(np.asarray(cases_h), return_counts=True))},
     }
     return mask, stats
 
@@ -527,10 +539,10 @@ def cc_ampc(g: UGraph, epsilon: float = 0.5, seed: int = 0,
         out_eids, hooks, cases, queries = truncated_prim(
             jnp.asarray(nbr), jnp.asarray(nbw), jnp.asarray(nbe),
             jnp.asarray(rank), budget)
-        total_q = int(jax.device_get(queries.sum()))
-    ledger.record_queries(total_q, total_q * 36, waves=1)
+        q_sum = queries.sum()
+    ledger.record_queries_deferred(q_sum, q_sum * 36, waves=1)
 
-    with ledger.shuffle("PointerJump", nbytes_of(np.asarray(hooks))):
+    with ledger.shuffle("PointerJump", nbytes_of(hooks)):
         parent = jnp.where(hooks >= 0, hooks, jnp.arange(nt, dtype=jnp.int32))
         roots, jump_iters = pointer_jump(parent)
 
@@ -552,13 +564,15 @@ def cc_ampc(g: UGraph, epsilon: float = 0.5, seed: int = 0,
         else:
             final_tern = jnp.take(dlabels, roots)
             orig_dev = jnp.take(final_tern, jnp.asarray(first_slot))
-        orig_labels = np.asarray(jax.device_get(orig_dev)).astype(np.int64)
+        orig_labels, q_h, jump_h, phases_h = \
+            ledger.harvest((orig_dev, q_sum, jump_iters, phases))
+        orig_labels = np.asarray(orig_labels).astype(np.int64)
 
     labels = _canonicalize(orig_labels)
     stats = {
-        "queries": total_q,
-        "pointer_jump_iters": int(jax.device_get(jump_iters)),
-        "dense_phases": int(jax.device_get(phases)),
+        "queries": int(q_h),
+        "pointer_jump_iters": int(jump_h),
+        "dense_phases": int(phases_h),
         "num_components": int(len(np.unique(labels))),
     }
     return labels, stats
@@ -597,21 +611,19 @@ def one_vs_two_ampc(g: UGraph, p: float = 1.0 / 64, seed: int = 0,
     rng = np.random.default_rng(seed)
     with ledger.shuffle("WriteKV", nbytes_of(g.edges)):
         nbr = jnp.asarray(cycle_adjacency(g))
-        sampled = rng.random(n) < p
+        sampled_np = rng.random(n) < p
         # guarantee at least one sample (paper: w.h.p. argument)
-        if not sampled.any():
-            sampled[rng.integers(n)] = True
-        sampled = jnp.asarray(sampled)
+        if not sampled_np.any():
+            sampled_np[rng.integers(n)] = True
+        sampled = jnp.asarray(sampled_np)
     ms = max_steps or int(min(n + 1, np.ceil(8 * np.log(max(n, 2)) / p)))
-    with ledger.shuffle("SampleWalk", int(np.asarray(sampled).sum()) * 4):
-        ncomp, steps, ok = _walk_and_count(nbr, sampled, ms)
-        ncomp = int(jax.device_get(ncomp))
-        total_steps = int(jax.device_get(steps))
-        ok = bool(jax.device_get(ok))
+    with ledger.shuffle("SampleWalk", int(sampled_np.sum()) * 4):
+        ncomp, steps, ok = ledger.harvest(_walk_and_count(nbr, sampled, ms))
+        ncomp, total_steps, ok = int(ncomp), int(steps), bool(ok)
     ledger.record_queries(total_steps, total_steps * 12, waves=1)
     if not ok:
         raise RuntimeError("walk budget exceeded; increase p or max_steps")
-    return ncomp, {"samples": int(np.asarray(jax.device_get(sampled)).sum()),
+    return ncomp, {"samples": int(sampled_np.sum()),
                    "walk_steps": total_steps, "max_steps": ms}
 
 
@@ -820,11 +832,11 @@ def mis_ampc_batched(bctx, batch, caching: bool = True):
     keys = np.broadcast_to(np.arange(nb, dtype=np.int32), (B, nb))
     out_b = bctx.dht.lookup_many(status_b, keys, ledgers=bctx.ledgers,
                                  key_mask=batch.node_mask)
-    status_h = np.asarray(jax.device_get(out_b))
+    # the bucket's one transfer: outputs + every ledger's deferred counters
+    status_h, iters, q0, q1 = harvest_many(
+        bctx.ledgers, (out_b, iters_b, q0_b, q1_b))
+    status_h = np.asarray(status_h)
     dt = time.perf_counter() - t0
-    iters = np.asarray(jax.device_get(iters_b))
-    q0 = np.asarray(jax.device_get(q0_b))
-    q1 = np.asarray(jax.device_get(q1_b))
     outs = []
     for b, g in enumerate(batch.graphs):
         led = bctx.ledgers[b]
@@ -877,11 +889,10 @@ def _mm_batched_launch(bctx, batch, eranks, caching: bool = True):
     keys = np.broadcast_to(np.arange(mb, dtype=np.int32), (B, mb))
     out_b = bctx.dht.lookup_many(estatus_b, keys, ledgers=bctx.ledgers,
                                  key_mask=batch.edge_mask)
-    estatus_h = np.asarray(jax.device_get(out_b))
+    estatus_h, iters, q0, q1 = harvest_many(
+        bctx.ledgers, (out_b, iters_b, q0_b, q1_b))
+    estatus_h = np.asarray(estatus_h)
     dt = time.perf_counter() - t0
-    iters = np.asarray(jax.device_get(iters_b))
-    q0 = np.asarray(jax.device_get(q0_b))
-    q1 = np.asarray(jax.device_get(q1_b))
     outs = []
     for b, g in enumerate(batch.graphs):
         led = bctx.ledgers[b]
@@ -966,11 +977,10 @@ def cc_ampc_batched(bctx, batch):
     keys = np.broadcast_to(np.arange(nb, dtype=np.int32), (B, nb))
     out_b = bctx.dht.lookup_many(labels_b, keys, ledgers=bctx.ledgers,
                                  key_mask=batch.node_mask)
-    labels_h = np.asarray(jax.device_get(out_b))
+    labels_h, iters, q0, q1 = harvest_many(
+        bctx.ledgers, (out_b, iters_b, q0_b, q1_b))
+    labels_h = np.asarray(labels_h)
     dt = time.perf_counter() - t0
-    iters = np.asarray(jax.device_get(iters_b))
-    q0 = np.asarray(jax.device_get(q0_b))
-    q1 = np.asarray(jax.device_get(q1_b))
     outs = []
     for b, g in enumerate(batch.graphs):
         led = bctx.ledgers[b]
@@ -1027,9 +1037,8 @@ def one_vs_two_ampc_batched(bctx, batch, p: float = 1.0 / 64,
         key, lambda: _build_1v2_solver(nb, ms), occupants=B)
     t0 = time.perf_counter()
     ncomp_b, steps_b, ok_b = solver(jnp.asarray(nbrs), jnp.asarray(sampled))
-    ncomp = np.asarray(jax.device_get(ncomp_b))
-    steps = np.asarray(jax.device_get(steps_b))
-    ok = np.asarray(jax.device_get(ok_b))
+    ncomp, steps, ok = harvest_many(bctx.ledgers, (ncomp_b, steps_b, ok_b))
+    ncomp, steps, ok = np.asarray(ncomp), np.asarray(steps), np.asarray(ok)
     dt = time.perf_counter() - t0
     outs = []
     for b, g in enumerate(batch.graphs):

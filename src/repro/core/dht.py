@@ -17,6 +17,17 @@ gather.  Two execution paths:
 Both support the *caching optimization*: sort-dedup of the key batch before
 fetching.  ``dedup_savings`` (queries avoided) is returned so benchmarks can
 reproduce the paper's Figure 4 measurement.
+
+The local path has two gather implementations (``ShardedDHT(impl=...)``):
+``"take"`` (plain ``jnp.take`` after ``dedup_keys``) and ``"pallas"`` (the
+``kernels.dht_gather`` cached-gather kernel, where the dedup happens as
+VMEM row reuse and the hit count feeds the same ledger counters).  The
+default is pallas on TPU and take elsewhere.
+
+This module is **host-sync free** (enforced by ``scripts/lint_host_sync.py``):
+every count a lookup produces is handed to the ledger as a raw device
+scalar via ``RoundLedger.record_queries_deferred``; deferred ledgers queue
+them and the engine harvests once per solve (see ``core.rounds``).
 """
 from __future__ import annotations
 
@@ -41,13 +52,21 @@ def dedup_keys(keys: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray
     """
     keys = jnp.asarray(keys, jnp.int32)
     safe = jnp.where(keys < 0, INT_MAX, keys)
-    sk = jnp.sort(safe)
-    first = jnp.concatenate([jnp.ones((1,), bool), sk[1:] != sk[:-1]])
-    first = first & (sk != INT_MAX)
-    uniq = jnp.where(first, sk, INT_MAX)
-    uniq = jnp.sort(uniq)
-    n_unique = first.sum()
-    inv = jnp.searchsorted(uniq, safe).astype(jnp.int32)
+    K = safe.shape[0]
+    # one argsort, then group arithmetic on the sorted view — replaces the
+    # former sort + re-sort: `grp` numbers the distinct values in ascending
+    # order, so scattering first-of-group values lands uniq already sorted,
+    # and `grp` mapped back through `order` *is* the inverse index (invalid
+    # keys share the INT_MAX group, whose index is exactly n_unique)
+    order = jnp.argsort(safe).astype(jnp.int32)
+    sk = jnp.take(safe, order)
+    newgrp = jnp.concatenate([jnp.ones((1,), bool), sk[1:] != sk[:-1]])
+    valid_first = newgrp & (sk != INT_MAX)
+    n_unique = valid_first.sum()
+    grp = (jnp.cumsum(newgrp) - 1).astype(jnp.int32)
+    uniq = jnp.full((K,), INT_MAX, jnp.int32).at[
+        jnp.where(valid_first, grp, K)].set(sk, mode="drop")
+    inv = jnp.zeros((K,), jnp.int32).at[order].set(grp)
     return uniq, inv, n_unique
 
 
@@ -65,6 +84,28 @@ def lookup(values: jnp.ndarray, keys: jnp.ndarray, dedup: bool = True):
     safe = jnp.clip(jnp.where(uniq == INT_MAX, 0, uniq), 0, values.shape[0] - 1)
     fetched = jnp.take(values, safe, axis=0)
     return jnp.take(fetched, inv, axis=0), n_unique
+
+
+def _fused_local_lookup(values, keys, row_bytes, dedup):
+    """One-dispatch local path: the gather plus every counter the ledger
+    records (queries, bytes, dedup savings) as a single compiled program.
+
+    The op-by-op version paid ~10 host dispatches per lookup (argsort,
+    cumsum, scatters, the counter arithmetic); fused, a warm lookup is one
+    XLA launch and the staged counters ride along as extra outputs, so a
+    deferred ledger never adds a dispatch of its own.
+    """
+    valid = (keys >= 0).sum()
+    out, n_unique = lookup(values, keys, dedup=dedup)
+    if not dedup:
+        n_unique = valid
+    nbytes = n_unique * (row_bytes + 4)
+    deduped = (valid - n_unique) if dedup else jnp.int32(0)
+    return out, n_unique, nbytes, deduped
+
+
+_fused_local_lookup = jax.jit(_fused_local_lookup,
+                              static_argnames=("dedup",))
 
 
 def _owner(keys: jnp.ndarray, shard_size: int) -> jnp.ndarray:
@@ -155,7 +196,8 @@ class ShardedDHT:
 
     def __init__(self, values: jnp.ndarray, ledger=None,
                  value_bytes: int | None = None, mesh=None,
-                 axis_name: str = "dht", capacity: int | None = None):
+                 axis_name: str = "dht", capacity: int | None = None,
+                 impl: str | None = None):
         self.values = values
         self.ledger = ledger
         self.mesh = mesh
@@ -163,30 +205,62 @@ class ShardedDHT:
         self.capacity = capacity
         self._row_bytes = value_bytes or int(
             values.dtype.itemsize * (values.size // max(values.shape[0], 1)))
+        if impl is None:
+            # the cached-gather kernel is compiled on TPU; elsewhere it
+            # would run under the Pallas interpreter, so default to take
+            impl = "pallas" if jax.default_backend() == "tpu" else "take"
+        if impl not in ("take", "pallas"):
+            raise ValueError(f"impl must be 'take' or 'pallas', got {impl!r}")
+        self.impl = impl
+        # routed path: pad value rows to the shard grid once per snapshot
+        # (a snapshot is immutable, so re-padding per lookup was pure waste)
+        if mesh is not None:
+            n_shards = mesh.shape[self.axis_name]
+            pad_rows = (-values.shape[0]) % n_shards
+            if pad_rows:
+                fill = jnp.zeros((pad_rows,) + values.shape[1:], values.dtype)
+                self._padded_values = jnp.concatenate([values, fill])
+            else:
+                self._padded_values = values
 
     @property
     def backend(self) -> str:
         return "local" if self.mesh is None else "routed"
 
     def _routed(self, keys, dedup: bool):
-        """Pad rows/keys to the shard grid, route, then slice back."""
+        """Pad keys to the shard grid, route, then slice back."""
         n_shards = self.mesh.shape[self.axis_name]
-        vals = self.values
-        pad_rows = (-vals.shape[0]) % n_shards
-        if pad_rows:
-            fill = jnp.zeros((pad_rows,) + vals.shape[1:], vals.dtype)
-            vals = jnp.concatenate([vals, fill])
         q = int(keys.size)
         pad_q = (-q) % n_shards
         k = keys
         if pad_q:
             k = jnp.concatenate([k, jnp.full((pad_q,), -1, jnp.int32)])
         out, n_unique, overflow = routed_lookup(
-            vals, k, self.mesh, self.axis_name, capacity=self.capacity,
-            dedup=dedup)
+            self._padded_values, k, self.mesh, self.axis_name,
+            capacity=self.capacity, dedup=dedup)
         if pad_q:
             out = out[:q]
         return out, n_unique, overflow
+
+    def _pallas_gather(self, keys):
+        """Cached-gather kernel path: returns (out, cache_hits).
+
+        The kernel's hit count satisfies ``hits == valid - distinct``
+        (cross-block carry in the kernel), so the caller derives
+        ``n_unique = valid - hits`` — bit-identical to ``dedup_keys``.
+        Invalid keys are re-pointed at row 0 afterwards to match the
+        take path's output contract exactly.
+        """
+        from ..kernels.dht_gather.ops import dht_gather
+
+        values = self.values
+        table = values.reshape(values.shape[0], -1)
+        out, hits = dht_gather(table, jnp.where(keys < 0, -1, keys),
+                               impl="pallas")
+        out = out.reshape(keys.shape + values.shape[1:])
+        out = jnp.where((keys < 0)[(...,) + (None,) * (values.ndim - 1)],
+                        values[0], out)
+        return out, hits
 
     def lookup(self, keys, dedup: bool = True):
         keys = jnp.asarray(keys, jnp.int32)
@@ -199,20 +273,44 @@ class ShardedDHT:
 
     def _lookup(self, keys, dedup: bool):
         # negative keys are padding: they are never queried, so they count
-        # neither as queries nor as dedup savings, on either backend
-        valid = int(jax.device_get((keys >= 0).sum()))
+        # neither as queries nor as dedup savings, on either backend.
+        # Every count below stays on the device: the ledger decides when
+        # (or whether) to sync — deferred ledgers harvest once per solve.
+        ledger = self.ledger
+        eager = ledger is not None and not getattr(ledger, "deferred", False)
         if self.mesh is None:
-            out, n_unique = lookup(self.values, keys, dedup=dedup)
-            if not dedup:
-                n_unique = valid
+            if dedup and self.impl == "pallas" and keys.size and \
+                    self.values.size:
+                valid = (keys >= 0).sum()
+                out, hits = self._pallas_gather(keys)
+                n_unique = valid - hits
+                nbytes = n_unique * (self._row_bytes + 4)
+                deduped = hits
+            elif eager:
+                # Seed-faithful eager hot path, preserved verbatim for
+                # deferred=False ledgers: the immediate-readability
+                # contract forces one blocking sync before the gather
+                # dispatch (valid) and one after it (n_unique) — exactly
+                # the per-lookup stalls the deferred ledger removes.
+                valid = int(jax.device_get((keys >= 0).sum()))  # host-sync: ok -- eager ledger contract
+                out, n_unique = lookup(self.values, keys, dedup=dedup)
+                nu = valid if not dedup \
+                    else int(jax.device_get(n_unique))  # host-sync: ok -- eager ledger contract
+                ledger.record_queries(
+                    nu, nu * (self._row_bytes + 4), waves=1,
+                    deduped_away=(valid - nu) if dedup else 0)
+                return out
+            else:
+                out, n_unique, nbytes, deduped = _fused_local_lookup(
+                    self.values, keys, self._row_bytes, dedup)
             overflow = 0
         else:
+            valid = (keys >= 0).sum()
             out, n_unique, overflow = self._routed(keys, dedup)
-            overflow = int(jax.device_get(overflow))
+            nbytes = n_unique * (self._row_bytes + 4)
+            deduped = (valid - n_unique) if dedup else 0
         if self.ledger is not None:
-            nu = int(jax.device_get(n_unique))
-            self.ledger.record_queries(
-                nu, nu * (self._row_bytes + 4), waves=1,
-                deduped_away=(valid - nu) if dedup else 0,
+            self.ledger.record_queries_deferred(
+                n_unique, nbytes, waves=1, deduped_away=deduped,
                 overflow=overflow)
         return out

@@ -6,6 +6,14 @@ inside a block the kernel walks keys sequentially and issues an HBM row DMA
 *only when the key differs from the previous one* — adjacent duplicates hit
 the in-register "cache", exactly the per-machine memoization of Section 5.3.
 The skipped-load count is returned so benchmarks can report cache savings.
+
+The cache carries across block boundaries for *counting* purposes: block
+``i > 0`` seeds its previous-key register from the last key of block
+``i-1`` (one extra row load), so the total hit count satisfies the exact
+identity ``hits == n_valid_keys - n_distinct_valid_keys``.  That identity
+is what lets ``ShardedDHT`` derive ``n_unique = valid - hits`` on the
+Pallas path bit-identically to the ``dedup_keys`` accounting of the
+``jnp.take`` path.
 """
 from __future__ import annotations
 
@@ -20,34 +28,44 @@ from jax.experimental.pallas import tpu as pltpu
 def _dht_gather_kernel(keys_ref, table_ref, o_ref, hits_ref, *, bq: int):
     i = pl.program_id(0)
     D = table_ref.shape[1]
+    V = table_ref.shape[0]
+
+    def _load_row(idx):
+        # comparisons use the raw key; the load clips into the table so
+        # out-of-range keys fetch row V-1 exactly like the take path's clip
+        safe = jnp.clip(idx, 0, V - 1)
+        return pl.load(table_ref, (pl.ds(safe, 1), slice(None)))
 
     def step(r, carry):
         prev_key, prev_row, hits = carry
         idx = keys_ref[i * bq + r]
         same = idx == prev_key
         valid = idx >= 0
-        safe = jnp.maximum(idx, 0)
-
-        def load(_):
-            return pl.load(table_ref, (pl.ds(safe, 1), slice(None))
-                           ).astype(jnp.float32)
-
-        row = jax.lax.cond(same, lambda _: prev_row, load, None)
-        out = jnp.where(valid, row, 0.0)
-        o_ref[r, :] = out[0].astype(o_ref.dtype)
+        row = jax.lax.cond(same, lambda _: prev_row,
+                           lambda _: _load_row(idx), None)
+        out = jnp.where(valid, row, jnp.zeros_like(row))
+        o_ref[r, :] = out[0]
         hits = hits + jnp.where(same & valid, 1, 0)
         return idx, row, hits
 
-    prev = (jnp.int32(-2), jnp.zeros((1, D), jnp.float32), jnp.int32(0))
-    _, _, hits = jax.lax.fori_loop(0, bq, step, prev)
+    def carry_in(_):
+        # seed the cache from the previous block's last key (one extra row
+        # load) so cross-block duplicate runs still count as hits and the
+        # hits == valid - distinct identity holds over the whole batch
+        prev_key = keys_ref[i * bq - 1]
+        return prev_key, _load_row(prev_key)
+
+    def fresh(_):
+        return jnp.int32(-2), jnp.zeros((1, D), table_ref.dtype)
+
+    prev_key, prev_row = jax.lax.cond(i > 0, carry_in, fresh, None)
+    _, _, hits = jax.lax.fori_loop(0, bq, step,
+                                   (prev_key, prev_row, jnp.int32(0)))
     hits_ref[0] = hits
 
 
 @functools.partial(jax.jit, static_argnames=("block_q", "interpret"))
-def dht_gather_pallas(table, sorted_keys, block_q: int = 64,
-                      interpret: bool = True):
-    """table: (V, D); sorted_keys: (Q,) ascending (-1 pad).
-    Returns (out (Q, D), cache_hits (Q//bq,))."""
+def _dht_gather_pallas(table, sorted_keys, block_q: int, interpret: bool):
     V, D = table.shape
     Q = sorted_keys.shape[0]
     bq = min(block_q, Q)
@@ -68,3 +86,17 @@ def dht_gather_pallas(table, sorted_keys, block_q: int = 64,
                    jax.ShapeDtypeStruct((Q // bq,), jnp.int32)],
         interpret=interpret,
     )(sorted_keys, table)
+
+
+def dht_gather_pallas(table, sorted_keys, block_q: int = 64,
+                      interpret: bool | None = None):
+    """table: (V, D); sorted_keys: (Q,) ascending (-1 pad).
+    Returns (out (Q, D), cache_hits (Q//bq,)).
+
+    ``interpret=None`` (the default) resolves by platform: compiled on
+    TPU, interpreter everywhere else.  ``interpret`` is static under jit,
+    so the detection happens here, outside the traced function.
+    """
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    return _dht_gather_pallas(table, sorted_keys, block_q, interpret)

@@ -7,23 +7,39 @@ from .kernel import dht_gather_pallas
 from .ref import dht_gather_ref
 
 
-def dht_gather(table, keys, impl: str = "pallas", interpret: bool = True,
+def dht_gather(table, keys, impl: str = "pallas", interpret: bool | None = None,
                block_q: int = 64, presorted: bool = False):
     """Gather table rows for a key batch with the caching optimization.
-    Returns (out, cache_hits_total)."""
+
+    ``keys`` may be any length (the sorted batch is padded with trailing
+    ``-1`` lanes up to the block grid; pad lanes are invalid, so they
+    produce no loads and no hits) and may contain negative entries, which
+    are treated as invalid and return zero rows.  ``interpret=None``
+    resolves by platform (compiled on TPU, interpreter elsewhere).
+
+    Returns (out, cache_hits_total); ``cache_hits_total`` counts adjacent
+    duplicate *valid* keys in sorted order, i.e. exactly
+    ``n_valid - n_distinct_valid``.
+    """
     if not presorted:
         order = jnp.argsort(keys)
         sk = keys[order]
     else:
         order = None
         sk = keys
+    q = sk.shape[0]
     if impl == "pallas":
-        out, hits = dht_gather_pallas(table, sk, block_q=block_q,
+        bq = min(block_q, q)
+        pad = (-q) % bq if bq else 0
+        padded = jnp.concatenate(
+            [sk, jnp.full((pad,), -1, jnp.int32)]) if pad else sk
+        out, hits = dht_gather_pallas(table, padded, block_q=bq,
                                       interpret=interpret)
+        out = out[:q]
         total_hits = hits.sum()
     else:
         out = dht_gather_ref(table, sk)
-        total_hits = (sk[1:] == sk[:-1]).sum()
+        total_hits = ((sk[1:] == sk[:-1]) & (sk[1:] >= 0)).sum()
     if order is not None:
         inv = jnp.zeros_like(order).at[order].set(
             jnp.arange(order.shape[0], dtype=order.dtype))

@@ -176,6 +176,18 @@ class Tracer:
                 self._orphan_events.append(
                     SpanEvent(name, _now_us(), level, attributes))
 
+    def current_span(self) -> Optional[Span]:
+        """The innermost open span on this thread, if any.
+
+        Deferred ledger accounting (``RoundLedger.record_queries_deferred``)
+        captures this span at record time and back-fills the
+        ``dht_queries`` event onto it at harvest, after the span has
+        closed — so deferred-mode traces carry the same event structure
+        the eager path emits live.
+        """
+        stack = getattr(self._local, "stack", None)
+        return stack[-1] if stack else None
+
     # -- internals ---------------------------------------------------------
     def _push(self, span: Span) -> None:
         stack = getattr(self._local, "stack", None)
@@ -282,6 +294,9 @@ class NoopTracer:
 
     def event(self, name, level="INFO", **attributes):
         pass
+
+    def current_span(self):
+        return None
 
     def spans(self):
         return []

@@ -1,0 +1,195 @@
+"""Deferred (device-resident) ledger accounting: bit-exactness + sync count.
+
+The hot-path contract introduced with ``RoundLedger(deferred=True)``:
+
+  1. Counter totals after a deferred solve's single harvest equal the
+     eager per-lookup totals bit for bit — on both DHT execution schedules
+     (local gather and the shard_map router) and for every engine problem.
+  2. ``impl="pallas"`` (cached-gather kernel) and ``impl="take"`` produce
+     bit-identical lookup outputs *and* ledger counters.
+  3. A warm ``engine.solve`` performs exactly ONE device->host harvest,
+     observed through the ``rounds.HARVEST_HOOK`` test hook; a warm
+     single-bucket ``solve_many`` also performs exactly one.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.ampc import AmpcEngine
+from repro.core import dht, rounds
+from repro.core.rounds import RoundLedger
+from repro.graph import generators as gen
+from repro.graph.coo import UGraph
+
+COUNTERS = ("shuffles", "bytes_shuffled", "dht_queries", "dht_bytes",
+            "dht_query_waves", "dedup_savings", "dht_overflows")
+
+
+def counters(ledger):
+    # accepts a live RoundLedger or the summary dict AmpcResult carries
+    summ = ledger if isinstance(ledger, dict) else ledger.summary()
+    return {k: summ[k] for k in COUNTERS}
+
+
+def _random_graph(draw):
+    n = draw(st.integers(6, 40))
+    m = draw(st.integers(0, 80))
+    rng = np.random.default_rng(draw(st.integers(0, 10_000)))
+    e = rng.integers(0, n, (m, 2)).astype(np.int32)
+    return UGraph(n, e).dedup()
+
+
+# ---------------------------------------------------------------- DHT level
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.data())
+def test_deferred_counters_bit_identical_local(data):
+    nvals = data.draw(st.integers(1, 50))
+    keys = np.array(
+        data.draw(st.lists(st.integers(-1, 60), min_size=1, max_size=100)),
+        np.int32)
+    values = jnp.arange(nvals, dtype=jnp.int32) * 3
+    dedup = data.draw(st.integers(0, 1)) == 1
+
+    eager, deferred = RoundLedger("e"), RoundLedger("d", deferred=True)
+    out_e = dht.ShardedDHT(values, ledger=eager).lookup(keys, dedup=dedup)
+    out_d = dht.ShardedDHT(values, ledger=deferred).lookup(keys, dedup=dedup)
+    deferred.harvest()
+    assert np.array_equal(np.asarray(out_e), np.asarray(out_d))
+    assert counters(eager) == counters(deferred)
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.data())
+def test_deferred_counters_bit_identical_routed(data):
+    mesh = jax.make_mesh((len(jax.devices()),), ("dht",))
+    nvals = data.draw(st.integers(2, 40))
+    keys = np.array(
+        data.draw(st.lists(st.integers(-1, 50), min_size=1, max_size=60)),
+        np.int32)
+    values = jnp.arange(nvals, dtype=jnp.int32)
+
+    eager, deferred = RoundLedger("e"), RoundLedger("d", deferred=True)
+    out_e = dht.ShardedDHT(values, ledger=eager, mesh=mesh,
+                           axis_name="dht").lookup(keys)
+    out_d = dht.ShardedDHT(values, ledger=deferred, mesh=mesh,
+                           axis_name="dht").lookup(keys)
+    deferred.harvest()
+    assert np.array_equal(np.asarray(out_e), np.asarray(out_d))
+    assert counters(eager) == counters(deferred)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.data())
+def test_pallas_vs_take_bit_identical(data):
+    nvals = data.draw(st.integers(1, 60))
+    keys = np.array(
+        data.draw(st.lists(st.integers(-2, 80), min_size=1, max_size=120)),
+        np.int32)
+    wide = data.draw(st.integers(0, 1)) == 1
+    values = (jnp.arange(nvals * 3, dtype=jnp.int32).reshape(nvals, 3)
+              if wide else jnp.arange(nvals, dtype=jnp.int32) * 7)
+
+    led_t, led_p = (RoundLedger("t", deferred=True),
+                    RoundLedger("p", deferred=True))
+    out_t = dht.ShardedDHT(values, ledger=led_t, impl="take").lookup(keys)
+    out_p = dht.ShardedDHT(values, ledger=led_p, impl="pallas").lookup(keys)
+    led_t.harvest(), led_p.harvest()
+    assert np.array_equal(np.asarray(out_t), np.asarray(out_p))
+    assert counters(led_t) == counters(led_p)
+
+
+def test_impl_validation_and_default():
+    values = jnp.arange(4, dtype=jnp.int32)
+    with pytest.raises(ValueError, match="impl"):
+        dht.ShardedDHT(values, impl="magic")
+    expect = "pallas" if jax.default_backend() == "tpu" else "take"
+    assert dht.ShardedDHT(values).impl == expect
+
+
+def test_eager_ledger_still_counts_immediately():
+    # deferred=False (the dataclass default) keeps the old contract: counters
+    # are host-readable right after the lookup, no harvest call needed.
+    led = RoundLedger("bare")
+    dht.ShardedDHT(jnp.arange(8, dtype=jnp.int32),
+                   ledger=led).lookup(np.array([1, 1, 2], np.int32))
+    assert led.dht_queries == 2 and led.dedup_savings == 1
+    assert led.harvest() is None  # nothing pending
+
+
+def test_harvest_returns_extra_payload():
+    led = RoundLedger("x", deferred=True)
+    dht.ShardedDHT(jnp.arange(8, dtype=jnp.int32),
+                   ledger=led).lookup(np.array([3, 3, 5], np.int32))
+    out, total = led.harvest((jnp.int32(11), jnp.arange(3)))
+    assert int(out) == 11 and np.array_equal(np.asarray(total), [0, 1, 2])
+    assert led.dht_queries == 2
+
+
+# ------------------------------------------------------------- engine level
+
+
+@settings(max_examples=6, deadline=None)
+@given(st.data())
+def test_engine_deferred_matches_eager(data):
+    g = _random_graph(data.draw)
+    algo = ("mis", "matching", "connectivity")[data.draw(st.integers(0, 2))]
+    seed = data.draw(st.integers(0, 1000))
+    res_d = AmpcEngine(seed=seed).solve(g, algo)
+    res_e = AmpcEngine(seed=seed, deferred_accounting=False).solve(g, algo)
+    assert np.array_equal(np.asarray(res_d.output), np.asarray(res_e.output))
+    assert counters(res_d.ledger) == counters(res_e.ledger)
+
+
+def test_engine_routed_deferred_matches_local():
+    g = gen.erdos_renyi(48, 3.0, seed=5)
+    for algo in ("mis", "connectivity"):
+        r = AmpcEngine(seed=0, dht_backend="routed").solve(g, algo)
+        e = AmpcEngine(seed=0, dht_backend="routed",
+                       deferred_accounting=False).solve(g, algo)
+        loc = AmpcEngine(seed=0).solve(g, algo)
+        assert counters(r.ledger) == counters(e.ledger) == counters(loc.ledger)
+
+
+@pytest.fixture
+def harvest_log():
+    calls = []
+    rounds.HARVEST_HOOK = lambda who: calls.append(who)
+    try:
+        yield calls
+    finally:
+        rounds.HARVEST_HOOK = None
+
+
+def test_warm_solve_single_harvest(harvest_log):
+    g = gen.erdos_renyi(56, 3.0, seed=2)
+    eng = AmpcEngine(seed=0)
+    for algo in ("mis", "matching", "connectivity", "one-vs-two"):
+        eng.solve(g if algo != "one-vs-two" else gen.two_cycles(24), algo)
+        harvest_log.clear()
+        eng.solve(g if algo != "one-vs-two" else gen.two_cycles(24), algo)
+        assert len(harvest_log) == 1, (algo, len(harvest_log))
+
+
+def test_warm_solve_many_single_harvest_per_bucket(harvest_log):
+    fleet = [gen.erdos_renyi(40, 3.0, seed=s) for s in range(4)]
+    eng = AmpcEngine(seed=0)
+    eng.solve_many(fleet, "mis")
+    harvest_log.clear()
+    results = eng.solve_many(fleet, "mis")
+    assert len(results) == 4
+    assert len(harvest_log) == 1
+
+
+def test_session_warm_solve_single_harvest(harvest_log):
+    g = gen.erdos_renyi(48, 3.0, seed=7)
+    eng = AmpcEngine(seed=0)
+    sess = eng.session(g)
+    sess.solve("mis")
+    harvest_log.clear()
+    res = sess.solve("matching")
+    assert res.stats["snapshot"]["hit"] is True
+    assert len(harvest_log) == 1

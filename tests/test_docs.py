@@ -146,6 +146,46 @@ def test_architecture_ledger_metric_map_resolves():
         assert metric in ENGINE_METRICS, f"unknown metric {metric!r}"
 
 
+def test_accounting_model_docs_in_sync():
+    """The Accounting model section must name the real deferred-ledger
+    surface, and its claims must resolve against the code: the hook
+    global, the harvest methods, the impl switch, and the lint script."""
+    import jax
+
+    from repro.ampc.engine import AmpcEngine
+    from repro.core import dht, rounds
+
+    text = (REPO / "docs" / "architecture.md").read_text()
+    m = re.search(r"^##\s+Accounting model\s*$(.*?)(?=^##\s|\Z)", text,
+                  re.S | re.M)
+    assert m, "Accounting model section missing from docs/architecture.md"
+    section = m.group(1)
+    for token in ("DeviceCounters", "record_queries_deferred", "harvest",
+                  "harvest_many", "HARVEST_HOOK", "current_span",
+                  "deferred_accounting=False", "deferred=True",
+                  'impl="take"|"pallas"', "scripts/lint_host_sync.py",
+                  "BENCH_dht_hot_path.json", "# host-sync: ok"):
+        assert token in section, (
+            f"{token!r} missing from the Accounting model section")
+    # the documented surface exists
+    assert hasattr(rounds, "HARVEST_HOOK")
+    assert hasattr(rounds, "harvest_many")
+    assert callable(rounds.RoundLedger.harvest)
+    assert callable(rounds.RoundLedger.record_queries_deferred)
+    assert rounds.DeviceCounters is not None
+    assert "deferred_accounting" in AmpcEngine.__init__.__code__.co_varnames
+    # documented default: engine ledgers are deferred, bare ledgers eager
+    assert rounds.RoundLedger("x").deferred is False
+    # documented impl default resolves by platform
+    expect = "pallas" if jax.default_backend() == "tpu" else "take"
+    assert dht.ShardedDHT(__import__("jax.numpy", fromlist=["jnp"])
+                          .arange(2)).impl == expect
+    assert (REPO / "scripts" / "lint_host_sync.py").exists()
+    check = (REPO / "scripts" / "check.sh").read_text()
+    assert "lint_host_sync.py" in check, (
+        "lint_host_sync.py not wired into scripts/check.sh")
+
+
 def test_async_serving_docs_in_sync():
     """The Async serving docs must name the real engine surface, and the
     ampc README's snapshot-problem list must match SNAPSHOT_PROBLEMS."""

@@ -19,7 +19,8 @@ def test_benchmark_registry_lists_all_benches():
     names = registry.names()
     for expected in ("table3_rounds", "bytes_comm", "mis_caching",
                      "runtimes", "msf_queries", "solve_many",
-                     "gnn_dht_hillclimb", "profile_cell", "roofline"):
+                     "dht_hot_path", "gnn_dht_hillclimb", "profile_cell",
+                     "roofline"):
         assert expected in names, f"{expected} missing from registry"
     spec = registry.get("table3_rounds")
     assert spec.takes_graphs and spec.quick_kwargs.get("graph_names")
