@@ -59,6 +59,7 @@ from .common import fmt_table
 from .registry import bench
 
 OUT_JSON = "BENCH_dht_hot_path.json"
+SESSION_JSON = "BENCH_session_reuse.json"   # companion: snapshot reuse
 
 
 def _make_dht(n_vals: int, impl: str, deferred: bool):
@@ -131,6 +132,42 @@ def _engine_solves(graph, problems, repeats: int):
     return out
 
 
+def _session_solves(graph, problems, repeats: int):
+    """Interleaved warm ``GraphSession.solve`` vs plain ``engine.solve``.
+
+    The snapshot-reuse claim for the ternarized views: a warm session
+    ``msf`` / ``connectivity`` solve materializes 1 round (the fused
+    algorithm shuffle) instead of rebuilding the ternarized KV image,
+    while the plain solve pays the full sequential shuffle pipeline.
+    """
+    out = {}
+    for prob in problems:
+        eng = AmpcEngine(seed=0)
+        sess = eng.session(graph)
+        plain = eng.solve(graph, prob)        # compile the plain path
+        sess.solve(prob)                      # cold: builds the view
+        warm = sess.solve(prob)               # compile the fused warm path
+        assert np.array_equal(np.asarray(warm.output),
+                              np.asarray(plain.output))
+        tp, tw = [], []
+        for _ in range(repeats):
+            t0 = time.perf_counter()
+            plain = eng.solve(graph, prob)
+            tp.append(time.perf_counter() - t0)
+            t0 = time.perf_counter()
+            warm = sess.solve(prob)
+            tw.append(time.perf_counter() - t0)
+        assert warm.stats["snapshot"]["hit"] is True
+        out[prob] = {
+            "plain_s": tp, "warm_session_s": tw,
+            "plain_shuffles": plain.ledger["shuffles"],
+            "warm_shuffles": warm.ledger["shuffles"],
+            "shuffles_saved": (plain.ledger["shuffles"]
+                               - warm.ledger["shuffles"]),
+        }
+    return out
+
+
 @bench("dht_hot_path",
        quick_kwargs={"problems": ["mis", "matching"], "repeats": 12,
                      "lookup_iters": 150, "waves": 24},
@@ -182,6 +219,32 @@ def run(problems=None, n: int = 1024, degree: float = 4.0,
     print("(fixpoint solves run their adaptive waves inside one jitted "
           "launch; 1-3 records/solve bounds the deferral win here)")
 
+    # -- scenario 4: warm-session snapshot reuse (msf / connectivity) ----
+    wg = gen.erdos_renyi(n, degree, seed=1).with_random_weights(seed=2)
+    sess = _session_solves(wg, ["msf", "connectivity"], repeats)
+    sess_rows = []
+    for prob, rec in sess.items():
+        mp_, mw = (statistics.median(rec["plain_s"]),
+                   statistics.median(rec["warm_session_s"]))
+        rec["warm_session_speedup"] = mp_ / mw
+        sess_rows.append([prob, f"{mp_ * 1e3:8.2f}", f"{mw * 1e3:8.2f}",
+                          f"{mp_ / mw:5.2f}x",
+                          f"{rec['plain_shuffles']}->{rec['warm_shuffles']}"])
+    print(fmt_table(["warm session", "plain ms", "session ms", "speedup",
+                     "shuffles"], sess_rows))
+    print("(warm session solves reuse the ternarized snapshot view: 1 "
+          "materialized round instead of the full sequential pipeline)")
+    session_doc = {
+        "bench": "dht_hot_path/session_reuse",
+        "host": {"backend": jax.default_backend(),
+                 "devices": jax.device_count()},
+        "graph": {"n": wg.n, "m": wg.m},
+        "session": sess,
+    }
+    with open(SESSION_JSON, "w") as fh:
+        json.dump(session_doc, fh, indent=2)
+    print(f"wrote {SESSION_JSON}")
+
     doc = {
         "bench": "dht_hot_path",
         "host": {"backend": jax.default_backend(),
@@ -195,6 +258,7 @@ def run(problems=None, n: int = 1024, degree: float = 4.0,
         "warm_solve_speedup_pallas": me / mp,
         "engine_solve_s": eng,
         "engine_solve_speedup": eng_speedup,
+        "companions": [SESSION_JSON],
     }
     with open(OUT_JSON, "w") as fh:
         json.dump(doc, fh, indent=2)

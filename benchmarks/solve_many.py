@@ -35,6 +35,15 @@ def _fleet(fleet_size: int):
     return [gen.erdos_renyi(n, 4.0, seed=i) for i, n in enumerate(sizes)]
 
 
+def _weighted_fleet(fleet_size: int):
+    # alternating density so weighted problems (msf) exercise both the
+    # sparse truncated-Prim and the dense Borůvka batched sub-launches
+    sizes = [FLEET_SIZES[i % len(FLEET_SIZES)] for i in range(fleet_size)]
+    return [gen.erdos_renyi(n, 2.0 if i % 2 == 0 else 10.0,
+                            seed=i).with_random_weights(seed=100 + i)
+            for i, n in enumerate(sizes)]
+
+
 def _disabled_tracer_overhead(fleet, prob, t_warm):
     """Upper-bound what the observability hooks cost a warm ``solve_many``
     pass with tracing *disabled*: count the span/event ops an enabled warm
@@ -57,19 +66,24 @@ def _disabled_tracer_overhead(fleet, prob, t_warm):
 
 
 @bench("solve_many",
-       quick_kwargs={"problems": ["mis", "matching"], "fleet_size": 8},
+       quick_kwargs={"problems": ["mis", "matching", "msf", "connectivity"],
+                     "fleet_size": 8},
        summary="solve_many vs looped solve(): per-graph latency on a "
                "mixed-size fleet")
 def run(problems=None, fleet_size: int = 16):
-    problems = problems or ["mis", "matching", "connectivity"]
-    fleet = _fleet(fleet_size)
-    buckets = bucketize(fleet)
-    print(f"fleet: {len(fleet)} graphs in {len(buckets)} shape buckets "
-          f"{sorted(buckets)}")
+    from repro.ampc.registry import get as get_problem
+
+    problems = problems or ["mis", "matching", "connectivity", "msf"]
+    plain_fleet = _fleet(fleet_size)
+    weighted = _weighted_fleet(fleet_size)
+    buckets = bucketize(plain_fleet)
+    print(f"fleet: {len(plain_fleet)} graphs in {len(buckets)} shape "
+          f"buckets {sorted(buckets)}")
     rows = []
     speedups = {}
     warm_times = {}
     for prob in problems:
+        fleet = weighted if get_problem(prob).needs_weights else plain_fleet
         eng = AmpcEngine(seed=0)   # fresh engine: cold solver cache
         t0 = time.perf_counter()
         seq = [eng.solve(g, prob) for g in fleet]
@@ -100,8 +114,10 @@ def run(problems=None, fleet_size: int = 16):
     print("\nper-graph latency: one vmapped launch per shape bucket vs one "
           "launch sequence per graph; warm = compiled-solver cache hits only")
     probe = problems[0]
+    probe_fleet = (weighted if get_problem(probe).needs_weights
+                   else plain_fleet)
     ops, per_op, frac = _disabled_tracer_overhead(
-        fleet, probe, warm_times[probe])
+        probe_fleet, probe, warm_times[probe])
     print(f"\ndisabled-tracer overhead ({probe} warm pass): {ops} hook ops "
           f"x {per_op * 1e9:.0f}ns no-op = {100 * frac:.3f}% of "
           f"{1e3 * warm_times[probe]:.1f}ms")

@@ -42,7 +42,10 @@ HOT_PATH_MODULES = [
     "src/repro/core/weighted_matching.py",
     "src/repro/core/connectivity.py",
     "src/repro/core/one_vs_two.py",
+    "src/repro/core/msf.py",
+    "src/repro/core/ternarize.py",
     "src/repro/ampc/backends.py",
+    "src/repro/ampc/session.py",
 ]
 
 SYNC_IDIOMS = [

@@ -33,10 +33,27 @@ solve rebuilds.  Sessions are keyed by identity, not content — two sessions
 on equal graphs build two snapshots, because the engine cannot know the
 caller keeps the arrays immutable.
 
-Problems outside :data:`SNAPSHOT_PROBLEMS` (msf, connectivity, one-vs-two —
-their first shuffle builds per-solve structures like ternarized adjacency,
-not a reusable KV image) run unchanged through a session; their stats
-report ``{"hit": False, "supported": False}``.
+The snapshot is a *view-keyed* KV layout: alongside the flat graph-KV
+image (``graph_kv``: symmetric adjacency + edge list, shared by ``mis``,
+``matching``, ``weighted-matching``, and ``vertex-cover``) it lazily
+carries the richer per-problem structures — the ternarized Δ<=3 adjacency
+with ``msf``'s weight-sorted edge structure (``tern_msf``), the
+unit-weight ternarization + first-slot map ``connectivity`` contracts
+through (``tern_cc``), the dense-path edge/weight image (``dense_msf``),
+and the cycle adjacency for ``one-vs-two`` (``cycle_adj``).
+Each view is built once, under its own shuffle on the first solve that
+needs it, and cached at ``(session_key, view)``; ``invalidate()`` evicts
+every view of the session by key prefix.  Warm ``msf`` / ``connectivity``
+solves therefore skip both the WriteGraphKV-style shuffle *and* the
+per-solve ternarize rebuild: 1 materialized round instead of 2.
+
+Problems outside :data:`SNAPSHOT_PROBLEMS` — the MPC baselines and the
+multi-launch variants (``msf-mpc``, ``matching-levels``, ``msf-kkt``, …,
+whose shuffle structure is per-phase, not a reusable KV image) — run
+unchanged through a session; their stats report
+``{"hit": False, "supported": False}``.  Alias names resolve through the
+registry first, so ``"cc"`` is snapshot-aware while ``"connectivity-mpc"``
+is not.
 
 Session solves inherit the engine's deferred accounting: warm solves stay
 host-sync free until the single per-solve ledger harvest (see
@@ -51,8 +68,12 @@ import threading
 from typing import Optional, TYPE_CHECKING
 
 import jax.numpy as jnp
+import numpy as np
 
+from ..core.one_vs_two import cycle_adjacency
 from ..core.rounds import nbytes_of
+from ..core.ternarize import ternarize
+from ..graph.coo import UGraph
 from .cache import SolverCache
 
 if TYPE_CHECKING:  # pragma: no cover - import cycle guard
@@ -60,9 +81,11 @@ if TYPE_CHECKING:  # pragma: no cover - import cycle guard
 
 __all__ = ["GraphSession", "GraphSnapshot", "SNAPSHOT_PROBLEMS"]
 
-# problems whose first shuffle is the reusable graph-KV write
+# problems whose first shuffle writes a reusable KV view of the graph
+# (flat graph-KV image, ternarized adjacency, or cycle adjacency)
 SNAPSHOT_PROBLEMS = frozenset(
-    {"mis", "matching", "weighted-matching", "vertex-cover"})
+    {"mis", "matching", "weighted-matching", "vertex-cover",
+     "msf", "connectivity", "one-vs-two"})
 
 _session_ids = itertools.count(1)
 
@@ -102,6 +125,80 @@ class GraphSnapshot:
 
         entries, hit = self._cache.get_or_build((self.key, "graph_kv"), build)
         return entries, hit
+
+    # ------------------------------------------------------------------
+    def _view(self, view: str, shuffle_name: str, nbytes: int, builder,
+              ledger):
+        """Build-or-hit one named KV view at ``(session_key, view)``.
+
+        The cold build runs under ``shuffle_name`` on the calling solve's
+        ledger, mirroring ``materialize``: cost lands on the solve that
+        paid it, warm solves record no shuffle for the view at all.
+        """
+        def build():
+            with ledger.shuffle(shuffle_name, nbytes):
+                return builder()
+
+        return self._cache.get_or_build((self.key, view), build)
+
+    def materialize_tern(self, ledger, unit: bool = False):
+        """Ternarized Δ<=3 adjacency view (``tern_msf`` / ``tern_cc``).
+
+        ``unit=True`` is connectivity's variant: weights are replaced by
+        the edge ids (any distinct weights do), and the view also carries
+        ``first_slot`` — the first tern slot of each original vertex,
+        through which component labels are read back.
+        """
+        g = self.graph
+
+        def build():
+            gw = (UGraph(g.n, g.edges, np.arange(g.m, dtype=np.float32))
+                  if unit else g)
+            tg = ternarize(gw)
+            bn, bw, be = tg.g.padded_adj(3)
+            entries = {
+                "tg": tg,
+                "nbr": jnp.asarray(bn),
+                "nbw": jnp.asarray(bw),
+                "nbe": jnp.asarray(be),
+                "tu": jnp.asarray(tg.g.edges[:, 0]),
+                "tv": jnp.asarray(tg.g.edges[:, 1]),
+                "tw": jnp.asarray(tg.g.weights),
+                "teid": jnp.asarray(tg.orig_eid),
+            }
+            if unit:
+                entries["first_slot"] = jnp.asarray(
+                    np.searchsorted(tg.node_of, np.arange(g.n)), jnp.int32)
+            return entries
+
+        nbytes = (nbytes_of(g.edges) if unit
+                  else nbytes_of(g.edges, g.weights))
+        return self._view("tern_cc" if unit else "tern_msf",
+                          "WriteTernKV", nbytes, build, ledger)
+
+    def materialize_dense(self, ledger):
+        """Dense-path MSF view (``dense_msf``): edge/weight device image."""
+        g = self.graph
+
+        def build():
+            return {
+                "edge_u": jnp.asarray(g.edges[:, 0]),
+                "edge_v": jnp.asarray(g.edges[:, 1]),
+                "edge_w": jnp.asarray(g.weights),
+            }
+
+        return self._view("dense_msf", "WriteGraphKV",
+                          nbytes_of(g.edges, g.weights), build, ledger)
+
+    def materialize_cycle(self, ledger):
+        """Cycle adjacency view (``cycle_adj``) for one-vs-two."""
+        g = self.graph
+
+        def build():
+            return {"cycle_nbr": jnp.asarray(cycle_adjacency(g))}
+
+        return self._view("cycle_adj", "WriteKV",
+                          nbytes_of(g.edges), build, ledger)
 
     def stat(self, hit: bool) -> dict:
         """The ``AmpcResult.stats["snapshot"]`` payload for one solve."""

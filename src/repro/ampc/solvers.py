@@ -39,11 +39,12 @@ import numpy as np
 
 from ..graph.coo import UGraph
 from ..core.rounds import RoundLedger, harvest_many, nbytes_of
-from ..core.ternarize import ternarize
+from ..core.ternarize import ternarize, ternarize_batch
 from ..core.mis import _mis_fixpoint, _mis_fixpoint_masked, IN, OUT, UNKNOWN
 from ..core.matching import _mm_fixpoint, _mm_wave, BIGF
-from ..core.msf import (truncated_prim, pointer_jump, contract_edges,
-                        boruvka_inround, _mpc_boruvka_phase)
+from ..core.msf import (truncated_prim, truncated_prim_capped, pointer_jump,
+                        contract_edges, boruvka_core, boruvka_inround,
+                        _mpc_boruvka_phase)
 from ..core.connectivity import (_canonicalize, _cc_fixpoint_masked,
                                  _h2m_phase)
 from ..core.one_vs_two import cycle_adjacency, _walk_and_count, \
@@ -389,11 +390,50 @@ def vertex_cover_2approx(g: UGraph, seed: int = 0,
 # ==========================================================================
 # MSF (paper Section 3, Algorithm 2)
 # ==========================================================================
+def _msf_assemble(orig_eid, m, dmask, eids_h, q_h, jump_h, live_h, phases_h,
+                  cases_h, budget, nt):
+    """Sparse-path output assembly shared by the 5-shuffle and the fused
+    session paths: union the Prim-discovered edges (tern eids mapped back
+    through ``orig_eid``) into the dense-phase mask, and build the stats."""
+    total_q = int(q_h)
+    prim_eids = np.asarray(eids_h).ravel()
+    prim_eids = prim_eids[prim_eids >= 0]
+    orig = orig_eid[prim_eids]
+    orig = orig[orig >= 0]
+    mask = dmask.copy()
+    if m:
+        mask[orig] = True
+    live_v = int(live_h)
+    stats = {
+        "path": "sparse",
+        "budget": budget,
+        "n_tern": nt,
+        "queries": total_q,
+        "avg_queries_per_vertex": total_q / max(nt, 1),
+        "pointer_jump_iters": int(jump_h),
+        "contracted_vertices": live_v,
+        "shrink_factor": nt / max(live_v, 1),
+        "dense_phases": int(phases_h),
+        "stop_cases": {int(k): int(c) for k, c in zip(
+            *np.unique(np.asarray(cases_h), return_counts=True))},
+    }
+    return mask, stats
+
+
 def msf_ampc(g: UGraph, epsilon: float = 0.5, seed: int = 0,
              ledger: Optional[RoundLedger] = None,
              skip_ternarize_if_dense: bool = True,
-             dht=None) -> Tuple[np.ndarray, dict]:
-    """Compute the MSF mask over g.edges.  Returns (mask, stats)."""
+             dht=None, snapshot=None) -> Tuple[np.ndarray, dict]:
+    """Compute the MSF mask over g.edges.  Returns (mask, stats).
+
+    ``snapshot`` switches to the fused session path: the ternarized
+    adjacency (or the dense edge image) comes from the session's cached KV
+    view — cold it is built under one ``WriteTernKV`` / ``WriteGraphKV``
+    shuffle, warm it is free — and the whole solve then runs in a single
+    ``MSF`` round (2 shuffles cold, 1 warm, vs the cold path's 5).  The
+    rank permutation is still the *first* per-solve draw from ``seed``, so
+    outputs are bit-identical to the snapshot-free path.
+    """
     ledger = ledger if ledger is not None else RoundLedger("ampc_msf")
     assert g.weights is not None
     n, m = g.n, g.m
@@ -402,15 +442,60 @@ def msf_ampc(g: UGraph, epsilon: float = 0.5, seed: int = 0,
     dense = skip_ternarize_if_dense and m >= n ** (1.0 + epsilon / 2.0)
     if dense:
         # Proposition 3.1 path: run the dense routine directly.
-        u = jnp.asarray(g.edges[:, 0]); v = jnp.asarray(g.edges[:, 1])
-        w = jnp.asarray(g.weights); eid = jnp.arange(m, dtype=jnp.int32)
+        if snapshot is not None:
+            entries, snap_hit = snapshot.materialize_dense(ledger)
+            u, v, w = entries["edge_u"], entries["edge_v"], entries["edge_w"]
+            shuffle_nbytes = 0  # the write was accounted at view build
+        else:
+            u = jnp.asarray(g.edges[:, 0]); v = jnp.asarray(g.edges[:, 1])
+            w = jnp.asarray(g.weights)
+            shuffle_nbytes = nbytes_of(g.edges, g.weights)
+        eid = jnp.arange(m, dtype=jnp.int32)
         valid = jnp.ones((m,), bool)
-        with ledger.shuffle("DenseMSF", nbytes_of(g.edges, g.weights)):
+        with ledger.shuffle("DenseMSF", shuffle_nbytes):
             mask_dev, _, phases = boruvka_inround(u, v, w, eid, valid, n, m)
             col_dev = _collect_dev(dht, ledger, mask_dev.astype(jnp.int32))
             mask, phases_h = ledger.harvest((col_dev, phases))
             mask = np.asarray(mask).astype(bool)
-        return mask, {"phases": int(phases_h), "path": "dense"}
+        stats = {"phases": int(phases_h), "path": "dense"}
+        if snapshot is not None:
+            stats["snapshot"] = snapshot.stat(snap_hit)
+        return mask, stats
+
+    if snapshot is not None:
+        # fused session path: read the ternarized view from the snapshot
+        # cache, then run Prim -> jump -> contract -> Borůvka in ONE round
+        entries, snap_hit = snapshot.materialize_tern(ledger)
+        tg = entries["tg"]
+        nt = tg.g.n
+        rank = rng.permutation(nt).astype(np.float32)
+        budget = max(2, int(np.ceil(nt ** (epsilon / 2.0))))
+        with ledger.shuffle("MSF", 0):
+            out_eids, hooks, cases, queries = truncated_prim(
+                entries["nbr"], entries["nbw"], entries["nbe"],
+                jnp.asarray(rank), budget)
+            q_sum = queries.sum()
+            ledger.record_queries_deferred(q_sum, q_sum * 36, waves=1)
+            parent = jnp.where(hooks >= 0, hooks,
+                               jnp.arange(nt, dtype=jnp.int32))
+            roots, jump_iters = pointer_jump(parent)
+            ledger.record_queries_deferred(jump_iters * nt,
+                                           jump_iters * nt * 4, waves=1)
+            cu, cv, cw, ceid, cvalid, live = contract_edges(
+                entries["tu"], entries["tv"], entries["tw"],
+                entries["teid"], jnp.ones((tg.g.m,), bool), roots)
+            dmask_dev, _, phases = boruvka_inround(cu, cv, cw, ceid, cvalid,
+                                                   nt, max(m, 1))
+            col_dev = _collect_dev(dht, ledger, dmask_dev.astype(jnp.int32))
+            (dmask, eids_h, q_h, jump_h, live_h, phases_h, cases_h) = \
+                ledger.harvest((col_dev, out_eids, q_sum, jump_iters, live,
+                                phases, cases))
+            dmask = np.asarray(dmask).astype(bool)
+        mask, stats = _msf_assemble(tg.orig_eid, m, dmask, eids_h, q_h,
+                                    jump_h, live_h, phases_h, cases_h,
+                                    budget, nt)
+        stats["snapshot"] = snapshot.stat(snap_hit)
+        return mask, stats
 
     # --- shuffle 1: SortGraph (ternarize + build sorted adjacency, write DHT)
     with ledger.shuffle("SortGraph", nbytes_of(g.edges, g.weights)):
@@ -455,31 +540,8 @@ def msf_ampc(g: UGraph, epsilon: float = 0.5, seed: int = 0,
             ledger.harvest((col_dev, out_eids, q_sum, jump_iters, live,
                             phases, cases))
         dmask = np.asarray(dmask).astype(bool)
-    total_q = int(q_h)
-
-    # union of Prim-discovered edges and the dense-phase edges
-    prim_eids = np.asarray(eids_h).ravel()
-    prim_eids = prim_eids[prim_eids >= 0]
-    orig = tg.orig_eid[prim_eids]
-    orig = orig[orig >= 0]
-    mask = dmask.copy()
-    if m:
-        mask[orig] = True
-    live_v = int(live_h)
-    stats = {
-        "path": "sparse",
-        "budget": budget,
-        "n_tern": nt,
-        "queries": total_q,
-        "avg_queries_per_vertex": total_q / max(nt, 1),
-        "pointer_jump_iters": int(jump_h),
-        "contracted_vertices": live_v,
-        "shrink_factor": nt / max(live_v, 1),
-        "dense_phases": int(phases_h),
-        "stop_cases": {int(k): int(c) for k, c in zip(
-            *np.unique(np.asarray(cases_h), return_counts=True))},
-    }
-    return mask, stats
+    return _msf_assemble(tg.orig_eid, m, dmask, eids_h, q_h, jump_h, live_h,
+                         phases_h, cases_h, budget, nt)
 
 
 def msf_mpc_boruvka(g: UGraph, seed: int = 0,
@@ -517,15 +579,66 @@ def msf_mpc_boruvka(g: UGraph, seed: int = 0,
 # ==========================================================================
 def cc_ampc(g: UGraph, epsilon: float = 0.5, seed: int = 0,
             ledger: Optional[RoundLedger] = None,
-            dht=None) -> Tuple[np.ndarray, dict]:
-    """Connected components; returns (labels(n,) canonical, stats)."""
+            dht=None, snapshot=None) -> Tuple[np.ndarray, dict]:
+    """Connected components; returns (labels(n,) canonical, stats).
+
+    ``snapshot`` switches to the fused session path (see :func:`msf_ampc`):
+    the unit-weight ternarization + first-slot map come from the session's
+    ``tern_cc`` KV view (one ``WriteTernKV`` shuffle, cold only) and the
+    solve runs in a single ``Connectivity`` round — 2 shuffles cold, 1
+    warm, bit-identical labels.
+    """
     ledger = ledger if ledger is not None else RoundLedger("ampc_cc")
     n, m = g.n, g.m
     if m == 0:
-        return np.arange(n, dtype=np.int64), {"queries": 0}
-    gw = UGraph(n, g.edges, np.arange(m, dtype=np.float32))  # unit-ish distinct
+        stats = {"queries": 0}
+        if snapshot is not None:
+            # nothing to materialize; the trivial answer never hits the KV
+            stats["snapshot"] = snapshot.stat(False)
+        return np.arange(n, dtype=np.int64), stats
     rng = np.random.default_rng(seed)
 
+    if snapshot is not None:
+        entries, snap_hit = snapshot.materialize_tern(ledger, unit=True)
+        tg = entries["tg"]
+        nt = tg.g.n
+        rank = rng.permutation(nt).astype(np.float32)
+        budget = max(2, int(np.ceil(nt ** (epsilon / 2.0))))
+        with ledger.shuffle("Connectivity", 0):
+            out_eids, hooks, cases, queries = truncated_prim(
+                entries["nbr"], entries["nbw"], entries["nbe"],
+                jnp.asarray(rank), budget)
+            q_sum = queries.sum()
+            ledger.record_queries_deferred(q_sum, q_sum * 36, waves=1)
+            parent = jnp.where(hooks >= 0, hooks,
+                               jnp.arange(nt, dtype=jnp.int32))
+            roots, jump_iters = pointer_jump(parent)
+            cu, cv, cw, ceid, cvalid, live = contract_edges(
+                entries["tu"], entries["tv"], entries["tw"],
+                entries["teid"], jnp.ones((tg.g.m,), bool), roots)
+            _, dlabels, phases = boruvka_inround(cu, cv, cw, ceid, cvalid,
+                                                 nt, max(m, 1))
+            # compose contractions: two genuine DHT reads of the label maps
+            if dht is not None:
+                final_tern = dht.lookup(dlabels, roots, ledger=ledger)
+                orig_dev = dht.lookup(final_tern, entries["first_slot"],
+                                      ledger=ledger)
+            else:
+                final_tern = jnp.take(dlabels, roots)
+                orig_dev = jnp.take(final_tern, entries["first_slot"])
+            orig_labels, q_h, jump_h, phases_h = \
+                ledger.harvest((orig_dev, q_sum, jump_iters, phases))
+            orig_labels = np.asarray(orig_labels).astype(np.int64)
+        labels = _canonicalize(orig_labels)
+        return labels, {
+            "queries": int(q_h),
+            "pointer_jump_iters": int(jump_h),
+            "dense_phases": int(phases_h),
+            "num_components": int(len(np.unique(labels))),
+            "snapshot": snapshot.stat(snap_hit),
+        }
+
+    gw = UGraph(n, g.edges, np.arange(m, dtype=np.float32))  # unit-ish distinct
     with ledger.shuffle("SortGraph", nbytes_of(gw.edges)):
         tg = ternarize(gw)
         nbr, nbw, nbe = tg.g.padded_adj(3)
@@ -604,18 +717,35 @@ def cc_mpc_hash_to_min(g: UGraph, ledger: Optional[RoundLedger] = None,
 # ==========================================================================
 def one_vs_two_ampc(g: UGraph, p: float = 1.0 / 64, seed: int = 0,
                     ledger: Optional[RoundLedger] = None,
-                    max_steps: Optional[int] = None) -> Tuple[int, dict]:
-    """Returns (num_cycles, stats)."""
+                    max_steps: Optional[int] = None,
+                    snapshot=None) -> Tuple[int, dict]:
+    """Returns (num_cycles, stats).
+
+    ``snapshot`` reads the cycle adjacency from the session's ``cycle_adj``
+    KV view instead of rebuilding it under the ``WriteKV`` shuffle; the
+    sample set is still drawn per solve (same rng order), so the answer is
+    identical — 2 shuffles cold, 1 warm.
+    """
     ledger = ledger if ledger is not None else RoundLedger("ampc_1v2c")
     n = g.n
     rng = np.random.default_rng(seed)
-    with ledger.shuffle("WriteKV", nbytes_of(g.edges)):
-        nbr = jnp.asarray(cycle_adjacency(g))
+    snap_stat = None
+    if snapshot is not None:
+        entries, snap_hit = snapshot.materialize_cycle(ledger)
+        nbr = entries["cycle_nbr"]
         sampled_np = rng.random(n) < p
-        # guarantee at least one sample (paper: w.h.p. argument)
         if not sampled_np.any():
             sampled_np[rng.integers(n)] = True
         sampled = jnp.asarray(sampled_np)
+        snap_stat = snapshot.stat(snap_hit)
+    else:
+        with ledger.shuffle("WriteKV", nbytes_of(g.edges)):
+            nbr = jnp.asarray(cycle_adjacency(g))
+            sampled_np = rng.random(n) < p
+            # guarantee at least one sample (paper: w.h.p. argument)
+            if not sampled_np.any():
+                sampled_np[rng.integers(n)] = True
+            sampled = jnp.asarray(sampled_np)
     ms = max_steps or int(min(n + 1, np.ceil(8 * np.log(max(n, 2)) / p)))
     with ledger.shuffle("SampleWalk", int(sampled_np.sum()) * 4):
         ncomp, steps, ok = ledger.harvest(_walk_and_count(nbr, sampled, ms))
@@ -623,8 +753,11 @@ def one_vs_two_ampc(g: UGraph, p: float = 1.0 / 64, seed: int = 0,
     ledger.record_queries(total_steps, total_steps * 12, waves=1)
     if not ok:
         raise RuntimeError("walk budget exceeded; increase p or max_steps")
-    return ncomp, {"samples": int(sampled_np.sum()),
-                   "walk_steps": total_steps, "max_steps": ms}
+    stats = {"samples": int(sampled_np.sum()),
+             "walk_steps": total_steps, "max_steps": ms}
+    if snap_stat is not None:
+        stats["snapshot"] = snap_stat
+    return ncomp, stats
 
 
 def one_vs_two_mpc(g: UGraph, seed: int = 0,
@@ -944,6 +1077,165 @@ def vertex_cover_2approx_batched(bctx, batch, caching: bool = True):
         cover[g.edges[in_mm, 1]] = True
         results.append((cover, {"cover_size": int(cover.sum()), **st}))
     return results
+
+
+def _build_msf_sparse_solver(ntb: int, mb: int, capacity: int):
+    """Vmapped sparse-MSF pipeline for one ternarized bucket shape.
+
+    ``capacity`` is the bucket-max Prim budget: every lane shares the
+    compiled buffer size while stopping at its own traced ``budget``
+    (bit-identical per ``truncated_prim_capped``).  ``mb`` is the bucket's
+    *original* edge capacity — the Borůvka mask is over original edge ids
+    (``teid``), exactly like the sequential path."""
+    def one(nbr, nbw, nbe, rank, budget, nmask, tu, tv, tw, teid, emask):
+        out_eids, hooks, cases, queries = truncated_prim_capped(
+            nbr, nbw, nbe, rank, budget, capacity)
+        # padded tern vertices exhaust on their first frontier pop; mask
+        # their unit query out of the per-graph total
+        q_sum = jnp.where(nmask, queries, 0).sum()
+        parent = jnp.where(hooks >= 0, hooks,
+                           jnp.arange(ntb, dtype=jnp.int32))
+        roots, jump_iters = pointer_jump(parent)
+        cu, cv, cw, ceid, cvalid, live = contract_edges(
+            tu, tv, tw, teid, emask, roots)
+        dmask, _, phases = boruvka_core(cu, cv, cw, ceid, cvalid, ntb, mb)
+        return (dmask.astype(jnp.int32), out_eids, q_sum, jump_iters,
+                live, phases, cases)
+
+    return jax.jit(jax.vmap(one))
+
+
+def _build_msf_dense_solver(nb: int, mb: int):
+    def one(u, v, w, emask):
+        eid = jnp.arange(mb, dtype=jnp.int32)
+        dmask, _, phases = boruvka_core(u, v, w, eid, emask, nb, mb)
+        return dmask.astype(jnp.int32), phases
+
+    return jax.jit(jax.vmap(one))
+
+
+@batched_impl("msf")
+def msf_ampc_batched(bctx, batch, skip_ternarize_if_dense: bool = True):
+    """Batched MSF: lanes split by the sequential dense/sparse predicate.
+
+    Sparse lanes run one vmapped truncated-Prim -> pointer-jump ->
+    contract -> Borůvka launch over a shared :func:`ternarize_batch`
+    bucket; dense lanes (``m >= n^(1+eps/2)``) run one vmapped Borůvka
+    launch, mirroring the sequential Proposition-3.1 shortcut.  Each lane
+    pads with isolated tern vertices / invalid edges and keeps its own
+    rank permutation and budget, so outputs are bit-identical to
+    sequential ``solve``; per-graph ledgers mirror the sequential 5- (or
+    1-) shuffle structure, and the whole bucket still materializes through
+    exactly one ``harvest_many`` transfer.
+    """
+    B, mb = len(batch), batch.m_bucket
+    eps = bctx.epsilon
+    dense_set = set(
+        b for b, g in enumerate(batch.graphs)
+        if skip_ternarize_if_dense and g.m >= g.n ** (1.0 + eps / 2.0))
+    dense_idx = sorted(dense_set)
+    sparse_idx = [b for b in range(B) if b not in dense_set]
+
+    t0 = time.perf_counter()
+    sparse_extra = dense_extra = None
+    if sparse_idx:
+        tb = ternarize_batch([batch.graphs[b] for b in sparse_idx])
+        Bs, ntb = len(tb), tb.nt_bucket
+        ranks = np.zeros((Bs, ntb), np.float32)
+        budgets = np.zeros((Bs,), np.int32)
+        for j, t in enumerate(tb.terns):
+            nt = t.g.n
+            rng = np.random.default_rng(bctx.seed)
+            ranks[j, :nt] = rng.permutation(nt).astype(np.float32)
+            ranks[j, nt:] = np.arange(nt, ntb, dtype=np.float32)
+            budgets[j] = max(2, int(np.ceil(nt ** (eps / 2.0))))
+        capacity = int(budgets.max())
+        for b in sparse_idx:
+            g = batch.graphs[b]
+            bctx.ledgers[b].record_shuffle(
+                "SortGraph", nbytes_of(g.edges, g.weights))
+        skey = bctx.solver_key(batch,
+                               ("sparse", ntb, tb.mt_bucket, capacity))
+        ssolver, shit = bctx.cache.get_or_build(
+            skey, lambda: _build_msf_sparse_solver(ntb, mb, capacity),
+            occupants=Bs)
+        (dmask_b, eids_b, q_b, jump_b, live_b, phases_b, cases_b) = ssolver(
+            jnp.asarray(tb.nbr), jnp.asarray(tb.nbw), jnp.asarray(tb.nbe),
+            jnp.asarray(ranks), jnp.asarray(budgets),
+            jnp.asarray(tb.node_mask), jnp.asarray(tb.edges[:, :, 0]),
+            jnp.asarray(tb.edges[:, :, 1]), jnp.asarray(tb.weights),
+            jnp.asarray(tb.orig_eid), jnp.asarray(tb.edge_mask))
+        # per-lane deferred traffic (prim, then pointer-jump) queued on
+        # each graph's ledger before the bucket's one harvest
+        for j, b in enumerate(sparse_idx):
+            nt = tb.terns[j].g.n
+            led = bctx.ledgers[b]
+            led.record_queries_deferred(q_b[j], q_b[j] * 36, waves=1)
+            led.record_queries_deferred(jump_b[j] * nt, jump_b[j] * nt * 4,
+                                        waves=1)
+        keys = np.broadcast_to(np.arange(mb, dtype=np.int32), (Bs, mb))
+        col_b = bctx.dht.lookup_many(
+            dmask_b, keys, ledgers=[bctx.ledgers[b] for b in sparse_idx],
+            key_mask=batch.edge_mask[np.asarray(sparse_idx)])
+        sparse_extra = (col_b, eids_b, q_b, jump_b, live_b, phases_b,
+                        cases_b)
+    if dense_idx:
+        didx = np.asarray(dense_idx)
+        demask = batch.edge_mask[didx]
+        dkey = bctx.solver_key(batch, ("dense",))
+        dsolver, dhit = bctx.cache.get_or_build(
+            dkey, lambda: _build_msf_dense_solver(batch.n_bucket, mb),
+            occupants=len(dense_idx))
+        dmaskd_b, dphases_b = dsolver(
+            jnp.asarray(batch.edges[didx, :, 0]),
+            jnp.asarray(batch.edges[didx, :, 1]),
+            jnp.asarray(batch.weights[didx]), jnp.asarray(demask))
+        keys = np.broadcast_to(np.arange(mb, dtype=np.int32),
+                               (len(dense_idx), mb))
+        dcol_b = bctx.dht.lookup_many(
+            dmaskd_b, keys, ledgers=[bctx.ledgers[b] for b in dense_idx],
+            key_mask=demask)
+        dense_extra = (dcol_b, dphases_b)
+
+    # the bucket's one transfer: both sub-launches' outputs and every
+    # ledger's deferred counters
+    sparse_h, dense_h = harvest_many(bctx.ledgers,
+                                     (sparse_extra, dense_extra))
+    dt = time.perf_counter() - t0
+
+    outs = [None] * B
+    if sparse_idx:
+        (col_h, eids_h, q_h, jump_h, live_h, phases_h, cases_h) = sparse_h
+        col_h = np.asarray(col_h)
+        eids_h = np.asarray(eids_h)
+        cases_h = np.asarray(cases_h)
+        for j, b in enumerate(sparse_idx):
+            g = batch.graphs[b]
+            t = tb.terns[j]
+            nt = t.g.n
+            led = bctx.ledgers[b]
+            led.record_queries(0, 0, waves=0)
+            led.record_shuffle("PrimSearch", 0)
+            led.record_shuffle("PointerJump", nt * 4)
+            led.record_shuffle("Contract", nbytes_of(t.g.edges, t.g.weights))
+            led.record_shuffle("DenseMSF", 0, seconds=dt / B)
+            mask, stats = _msf_assemble(
+                t.orig_eid, g.m, col_h[j, :g.m].astype(bool),
+                eids_h[j, :nt], q_h[j], jump_h[j], live_h[j], phases_h[j],
+                cases_h[j, :nt], int(budgets[j]), nt)
+            stats["solver_cache"] = _cache_stat(skey, shit, j)
+            outs[b] = (mask, stats)
+    if dense_idx:
+        dcol_h, dphases_h = dense_h
+        dcol_h = np.asarray(dcol_h)
+        for j, b in enumerate(dense_idx):
+            g = batch.graphs[b]
+            bctx.ledgers[b].record_shuffle(
+                "DenseMSF", nbytes_of(g.edges, g.weights), seconds=dt / B)
+            outs[b] = (dcol_h[j, :g.m].astype(bool),
+                       {"phases": int(dphases_h[j]), "path": "dense",
+                        "solver_cache": _cache_stat(dkey, dhit, j)})
+    return outs
 
 
 def _build_cc_solver(n: int):

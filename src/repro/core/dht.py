@@ -53,6 +53,12 @@ def dedup_keys(keys: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray
     keys = jnp.asarray(keys, jnp.int32)
     safe = jnp.where(keys < 0, INT_MAX, keys)
     K = safe.shape[0]
+    if K == 0:
+        # zero-length batches appear once masked buckets land (an msf bucket
+        # whose lane has no live queries); the group arithmetic below would
+        # build a shape-(1,) newgrp for a shape-(0,) sort — guard explicitly
+        return (jnp.full((0,), INT_MAX, jnp.int32),
+                jnp.zeros((0,), jnp.int32), jnp.int32(0))
     # one argsort, then group arithmetic on the sorted view — replaces the
     # former sort + re-sort: `grp` numbers the distinct values in ascending
     # order, so scattering first-of-group values lands uniq already sorted,
@@ -277,6 +283,16 @@ class ShardedDHT:
         # Every count below stays on the device: the ledger decides when
         # (or whether) to sync — deferred ledgers harvest once per solve.
         ledger = self.ledger
+        if keys.size == 0:
+            # zero-length query batch: nothing to exchange on any backend or
+            # impl, and the routed router cannot even pad an empty batch onto
+            # the shard grid — answer locally with an empty gather and record
+            # explicit zero counters (plain host ints work on both eager and
+            # deferred ledgers without adding a sync)
+            if ledger is not None:
+                ledger.record_queries(0, 0, waves=0)
+            return jnp.zeros(keys.shape + self.values.shape[1:],
+                             self.values.dtype)
         eager = ledger is not None and not getattr(ledger, "deferred", False)
         if self.mesh is None:
             if dedup and self.impl == "pallas" and keys.size and \

@@ -38,24 +38,30 @@ INF = jnp.float32(jnp.inf)
 # --------------------------------------------------------------------------
 # Algorithm 1: truncated Prim
 # --------------------------------------------------------------------------
-@functools.partial(jax.jit, static_argnames=("budget",))
-def truncated_prim(nbr, nbw, nbe, rank, budget: int):
-    """Run rank-truncated Prim from every vertex of a Δ<=3 graph.
+@functools.partial(jax.jit, static_argnames=("capacity",))
+def truncated_prim_capped(nbr, nbw, nbe, rank, budget, capacity: int):
+    """``truncated_prim`` with the buffer *capacity* decoupled from the
+    stopping *budget*.
 
-    nbr/nbw/nbe: (n, D) padded adjacency (ids / weights / edge ids), -1 / inf pad.
-    rank: (n,) distinct float ranks (the random permutation π).
-    Returns (out_eids (n, budget), hooks (n,), cases (n,), queries (n,)).
-    cases: 1 = budget hit, 2 = component exhausted, 3 = lower-rank hook.
+    The buffers (visited set, output slots, frontier) are sized by the static
+    ``capacity`` while the stopping condition compares against the traced
+    ``budget`` (an int32 scalar, ``budget <= capacity``).  With
+    ``capacity == budget`` the trajectory is identical to ``truncated_prim``;
+    with ``capacity > budget`` the extra slots stay at their -1/inf fill and
+    never win the frontier argmin, so outputs are still bit-identical.  This
+    is what lets a vmapped batch of graphs share one compiled program while
+    each lane keeps its own n-dependent budget.
     """
     n, D = nbr.shape
-    F = D * budget  # frontier capacity
+    F = D * capacity  # frontier capacity
+    budget = jnp.asarray(budget, jnp.int32)
 
     def per_vertex(v):
-        visited = jnp.full((budget,), -1, jnp.int32).at[0].set(v)
+        visited = jnp.full((capacity,), -1, jnp.int32).at[0].set(v)
         fdst = jnp.full((F,), -1, jnp.int32).at[:D].set(nbr[v])
         fw = jnp.full((F,), INF).at[:D].set(nbw[v])
         feid = jnp.full((F,), -1, jnp.int32).at[:D].set(nbe[v])
-        out = jnp.full((budget,), -1, jnp.int32)
+        out = jnp.full((capacity,), -1, jnp.int32)
         st = dict(visited=visited, vcount=jnp.int32(1), fdst=fdst, fw=fw,
                   feid=feid, fsize=jnp.int32(D), out=out, ocount=jnp.int32(0),
                   hook=jnp.int32(-1), case=jnp.int32(0), queries=jnp.int32(1))
@@ -112,6 +118,19 @@ def truncated_prim(nbr, nbw, nbe, rank, budget: int):
     return jax.vmap(per_vertex)(jnp.arange(n, dtype=jnp.int32))
 
 
+@functools.partial(jax.jit, static_argnames=("budget",))
+def truncated_prim(nbr, nbw, nbe, rank, budget: int):
+    """Run rank-truncated Prim from every vertex of a Δ<=3 graph.
+
+    nbr/nbw/nbe: (n, D) padded adjacency (ids / weights / edge ids), -1 / inf pad.
+    rank: (n,) distinct float ranks (the random permutation π).
+    Returns (out_eids (n, budget), hooks (n,), cases (n,), queries (n,)).
+    cases: 1 = budget hit, 2 = component exhausted, 3 = lower-rank hook.
+    """
+    return truncated_prim_capped(nbr, nbw, nbe, rank,
+                                 jnp.int32(budget), budget)
+
+
 # --------------------------------------------------------------------------
 # Proposition 3.2: forest contraction by pointer jumping (in-round)
 # --------------------------------------------------------------------------
@@ -124,7 +143,11 @@ def pointer_jump(parent: jnp.ndarray):
 
     def body(s):
         p, it = s
-        return p[p], it + 1
+        nxt = p[p]
+        # gate the counter on actual progress so a vmapped lane that has
+        # already converged stops counting (sequentially the body only runs
+        # while cond holds, so the gate is a no-op there)
+        return nxt, it + jnp.any(nxt != p).astype(jnp.int32)
 
     p, iters = jax.lax.while_loop(cond, body, (parent, jnp.int32(0)))
     return p, iters
@@ -205,7 +228,7 @@ def boruvka_core(u, v, w, eid, valid, n_labels: int, max_eid: int):
         return ~done
 
     def body(s):
-        labels, mask, it, _ = s
+        labels, mask, it, done_prev = s
         lu, lv = labels[u], labels[v]
         min_eid, partner, has = _component_min_edge(lu, lv, w, eid, valid, n)
         parent = jnp.where(has, partner, labels0)
@@ -220,7 +243,11 @@ def boruvka_core(u, v, w, eid, valid, n_labels: int, max_eid: int):
         mask = mask | selected_mask
         labels = roots[labels]
         done = ~jnp.any(has)
-        return labels, mask, it + 1, done
+        # gate the phase counter on the carried-in done flag: sequentially
+        # cond guarantees done_prev is False (so the gate is a no-op), but
+        # under vmap a finished lane keeps executing the body until the
+        # slowest lane converges and must stop counting phases
+        return labels, mask, it + (~done_prev).astype(jnp.int32), done
 
     labels, mask, phases, _ = jax.lax.while_loop(
         cond, body, (labels0, mask0, jnp.int32(0), jnp.asarray(False)))

@@ -300,13 +300,16 @@ def test_session_invalidate_rebuilds():
 
 
 def test_session_unsupported_problem_passes_through():
-    g = gen.erdos_renyi(60, 3.0, seed=3).with_random_weights(3)
+    g = gen.erdos_renyi(60, 3.0, seed=3)
     with AmpcEngine(seed=0) as eng:
-        res = eng.session(g).solve("msf", skip_ternarize_if_dense=False)
+        res = eng.session(g).solve("matching-levels")
         assert res.stats["snapshot"] == {"hit": False, "supported": False}
-        want = eng.solve(g, "msf", skip_ternarize_if_dense=False)
+        want = eng.solve(g, "matching-levels")
         assert np.array_equal(res.output, want.output)
-    assert "msf" not in SNAPSHOT_PROBLEMS
+    # every Table-3 core problem is snapshot-aware now; the multi-launch
+    # variants are not
+    assert "msf" in SNAPSHOT_PROBLEMS
+    assert "matching-levels" not in SNAPSHOT_PROBLEMS
 
 
 def test_session_async_submit_shares_snapshot():
@@ -319,7 +322,9 @@ def test_session_async_submit_shares_snapshot():
         assert np.array_equal(res.output, eng.solve(g, "matching").output)
 
 
-SESSION_PROBLEMS = sorted(SNAPSHOT_PROBLEMS)
+# one-vs-two needs a union-of-cycles input, so it gets its own session
+# test below; everything else shares one weighted ER graph
+SESSION_PROBLEMS = sorted(SNAPSHOT_PROBLEMS - {"one-vs-two"})
 
 
 @settings(max_examples=5, deadline=None)
@@ -336,3 +341,14 @@ def test_property_session_equals_fresh_engine(seq):
             want = AmpcEngine(seed=0).solve(g, name)
             assert np.array_equal(got.output, want.output)
             assert got.stats["snapshot"]["supported"] is True
+
+
+def test_session_one_vs_two_equals_fresh_engine():
+    g = gen.two_cycles(32)
+    with AmpcEngine(seed=0) as eng:
+        sess = eng.session(g)
+        cold = sess.solve("one-vs-two", p=1 / 8)
+        warm = sess.solve("one-vs-two", p=1 / 8)
+        want = AmpcEngine(seed=0).solve(g, "one-vs-two", p=1 / 8)
+    assert cold.output == warm.output == want.output == 2
+    assert warm.stats["snapshot"]["hit"] and warm.ledger["shuffles"] == 1

@@ -102,6 +102,30 @@ def test_pallas_vs_take_bit_identical(data):
     assert counters(led_t) == counters(led_p)
 
 
+@pytest.mark.parametrize("impl", ["take", "pallas"])
+def test_zero_length_query_batch(impl):
+    # n=0 lanes appear once masked msf buckets land: lookups must not crash
+    # on either impl, and counters must report zeros
+    for deferred in (False, True):
+        led = RoundLedger("z", deferred=deferred)
+        values = jnp.arange(6, dtype=jnp.int32) * 2
+        out = dht.ShardedDHT(values, ledger=led,
+                             impl=impl).lookup(np.zeros((0,), np.int32))
+        led.harvest()
+        assert out.shape == (0,)
+        assert led.dht_queries == 0 and led.dht_bytes == 0
+    # wide values keep their row shape
+    wide = jnp.arange(12, dtype=jnp.int32).reshape(6, 2)
+    out = dht.ShardedDHT(wide, impl=impl).lookup(np.zeros((0,), np.int32))
+    assert out.shape == (0, 2)
+
+
+def test_dedup_keys_zero_length():
+    uniq, inv, n_unique = dht.dedup_keys(jnp.zeros((0,), jnp.int32))
+    assert uniq.shape == (0,) and inv.shape == (0,)
+    assert int(n_unique) == 0
+
+
 def test_impl_validation_and_default():
     values = jnp.arange(4, dtype=jnp.int32)
     with pytest.raises(ValueError, match="impl"):
@@ -164,13 +188,19 @@ def harvest_log():
         rounds.HARVEST_HOOK = None
 
 
-def test_warm_solve_single_harvest(harvest_log):
+def _graph_for(algo):
+    if algo == "one-vs-two":
+        return gen.two_cycles(24)
     g = gen.erdos_renyi(56, 3.0, seed=2)
+    return g.with_random_weights(seed=3) if algo == "msf" else g
+
+
+def test_warm_solve_single_harvest(harvest_log):
     eng = AmpcEngine(seed=0)
-    for algo in ("mis", "matching", "connectivity", "one-vs-two"):
-        eng.solve(g if algo != "one-vs-two" else gen.two_cycles(24), algo)
+    for algo in ("mis", "matching", "connectivity", "one-vs-two", "msf"):
+        eng.solve(_graph_for(algo), algo)
         harvest_log.clear()
-        eng.solve(g if algo != "one-vs-two" else gen.two_cycles(24), algo)
+        eng.solve(_graph_for(algo), algo)
         assert len(harvest_log) == 1, (algo, len(harvest_log))
 
 
@@ -184,6 +214,22 @@ def test_warm_solve_many_single_harvest_per_bucket(harvest_log):
     assert len(harvest_log) == 1
 
 
+def test_warm_solve_many_msf_single_harvest_per_bucket(harvest_log):
+    # one shape bucket mixing dense and sparse lanes: the two sub-launches
+    # must still materialize through ONE harvest
+    fleet = [gen.erdos_renyi(40, 2.0 if s % 2 else 10.0,
+                             seed=s).with_random_weights(seed=s)
+             for s in range(4)]
+    from repro.graph.batching import bucketize
+    eng = AmpcEngine(seed=0)
+    eng.solve_many(fleet, "msf")
+    harvest_log.clear()
+    results = eng.solve_many(fleet, "msf")
+    assert len(results) == 4
+    assert {r.stats["path"] for r in results} == {"sparse", "dense"}
+    assert len(harvest_log) == len(bucketize(fleet))
+
+
 def test_session_warm_solve_single_harvest(harvest_log):
     g = gen.erdos_renyi(48, 3.0, seed=7)
     eng = AmpcEngine(seed=0)
@@ -193,3 +239,16 @@ def test_session_warm_solve_single_harvest(harvest_log):
     res = sess.solve("matching")
     assert res.stats["snapshot"]["hit"] is True
     assert len(harvest_log) == 1
+
+
+def test_session_warm_msf_cc_single_harvest(harvest_log):
+    g = gen.erdos_renyi(48, 2.0, seed=7).with_random_weights(seed=1)
+    eng = AmpcEngine(seed=0)
+    sess = eng.session(g)
+    for algo in ("msf", "connectivity"):
+        sess.solve(algo)
+        harvest_log.clear()
+        res = sess.solve(algo)
+        assert res.stats["snapshot"]["hit"] is True
+        assert res.ledger["shuffles"] == 1
+        assert len(harvest_log) == 1, (algo, len(harvest_log))

@@ -211,6 +211,39 @@ def test_async_serving_docs_in_sync():
             "README's Async serving section")
 
 
+def test_architecture_snapshot_docs_in_sync():
+    """The GraphSession snapshot docs must name every snapshot-aware
+    problem and the view-building shuffles of the view-keyed layout, and
+    the session module docstring must name the same problem set."""
+    from repro.ampc import SNAPSHOT_PROBLEMS
+    from repro.ampc import session as session_mod
+
+    text = (REPO / "docs" / "architecture.md").read_text()
+    m = re.search(r"^###\s+Snapshot reuse: `GraphSession`\s*$(.*?)"
+                  r"(?=^#{2,3}\s|\Z)", text, re.S | re.M)
+    assert m, "Snapshot reuse section missing from docs/architecture.md"
+    section = m.group(1)
+    for name in sorted(SNAPSHOT_PROBLEMS):
+        assert f"`{name}`" in section, (
+            f"snapshot-aware problem {name!r} missing from the "
+            "architecture snapshot section")
+    for token in ("WriteGraphKV", "WriteTernKV", "SNAPSHOT_PROBLEMS",
+                  "view-keyed"):
+        assert token in section, (
+            f"{token!r} missing from the architecture snapshot section")
+    doc = session_mod.__doc__ or ""
+    for name in sorted(SNAPSHOT_PROBLEMS):
+        assert f"``{name}``" in doc, (
+            f"snapshot-aware problem {name!r} missing from the session.py "
+            "module docstring")
+    # the batched-msf note rides in the solve_many anatomy section
+    anatomy = re.search(r"^##\s+Anatomy of a `solve_many` bucket launch\s*$"
+                        r"(.*?)(?=^##\s|\Z)", text, re.S | re.M)
+    assert anatomy, "solve_many anatomy section missing"
+    assert "`msf`" in anatomy.group(1), (
+        "batched msf not documented in the solve_many anatomy section")
+
+
 def test_benchmark_registry_docstring_matches_dispatch():
     """benchmarks/registry.py documents the @bench contract; the registered
     specs must actually follow it (run(**kwargs) plus quick_kwargs that the

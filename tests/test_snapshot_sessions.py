@@ -1,0 +1,128 @@
+"""Snapshot-aware ``msf`` / ``connectivity`` / ``one-vs-two`` sessions.
+
+The tentpole contract for the richer ``GraphSnapshot`` KV layout: warm
+session solves of every Table-3 core problem skip both the write shuffle
+and the per-solve ternarize rebuild (1 materialized round instead of 2)
+while staying bit-identical to plain ``engine.solve`` — plus the cache /
+alias edge-case regressions that ride along.
+"""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.ampc import AmpcEngine, registry
+from repro.ampc.session import SNAPSHOT_PROBLEMS
+from repro.graph import generators as gen
+
+
+def _sparse_weighted(seed=1):
+    return gen.erdos_renyi(60, 2.0, seed=seed).with_random_weights(
+        seed=seed + 100)
+
+
+@pytest.mark.parametrize("backend", ["local", "routed"])
+@pytest.mark.parametrize("problem", ["msf", "connectivity"])
+def test_warm_session_one_shuffle_bit_identical(backend, problem):
+    g = _sparse_weighted()
+    eng = AmpcEngine(dht_backend=backend, seed=0)
+    want = eng.solve(g, problem)
+    sess = eng.session(g)
+    cold = sess.solve(problem)
+    warm = sess.solve(problem)
+    assert np.array_equal(want.output, cold.output)
+    assert np.array_equal(want.output, warm.output)
+    assert cold.stats["snapshot"]["hit"] is False
+    assert warm.stats["snapshot"]["hit"] is True
+    assert cold.ledger["shuffles"] == 2 and warm.ledger["shuffles"] == 1
+
+
+def test_warm_session_dense_msf():
+    g = gen.erdos_renyi(40, 14.0, seed=2).with_random_weights(seed=5)
+    eng = AmpcEngine(seed=0)
+    want = eng.solve(g, "msf")
+    assert want.stats["path"] == "dense"
+    sess = eng.session(g)
+    cold, warm = sess.solve("msf"), sess.solve("msf")
+    assert np.array_equal(want.output, cold.output)
+    assert np.array_equal(want.output, warm.output)
+    assert warm.stats["snapshot"]["hit"] and warm.ledger["shuffles"] == 1
+
+
+def test_msf_and_cc_views_are_distinct():
+    # msf and connectivity ternarize differently (real weights vs unit
+    # weights + first-slot map): one session carries both views, each built
+    # once, and invalidate() drops them together by key prefix
+    g = _sparse_weighted(3)
+    eng = AmpcEngine(seed=0)
+    sess = eng.session(g)
+    m1 = sess.solve("msf")
+    c1 = sess.solve("connectivity")
+    assert c1.stats["snapshot"]["hit"] is False  # its own view, own build
+    m2 = sess.solve("msf")
+    c2 = sess.solve("connectivity")
+    assert m2.stats["snapshot"]["hit"] and c2.stats["snapshot"]["hit"]
+    assert np.array_equal(m1.output, m2.output)
+    assert np.array_equal(c1.output, c2.output)
+    assert sess.invalidate() == 2
+    assert sess.invalidate() == 0
+
+
+@settings(max_examples=5, deadline=None)
+@given(st.integers(0, 10_000))
+def test_property_session_msf_cc_bit_exact(seed):
+    rng = np.random.default_rng(seed)
+    n = int(rng.integers(8, 48))
+    g = gen.erdos_renyi(n, float(rng.uniform(1.0, 6.0)), seed=seed)
+    if g.m == 0:
+        g = gen.path(n)
+    g = g.with_random_weights(seed=seed + 1)
+    eng = AmpcEngine(seed=seed % 7)
+    sess = eng.session(g)
+    for problem in ("msf", "connectivity"):
+        want = AmpcEngine(seed=seed % 7).solve(g, problem)
+        cold = sess.solve(problem)
+        warm = sess.solve(problem)
+        assert np.array_equal(want.output, cold.output)
+        assert np.array_equal(want.output, warm.output)
+
+
+# --------------------------------------------------------------------------
+# satellite regressions: cache kinds, invalidate idempotency, alias support
+# --------------------------------------------------------------------------
+def test_cache_info_unknown_kind_raises():
+    eng = AmpcEngine(seed=0)
+    with pytest.raises(ValueError, match="solver"):
+        eng.cache_info(kind="bogus")
+    with pytest.raises(ValueError, match="snapshot"):
+        eng.cache_info(kind="")
+
+
+def test_invalidate_idempotent_after_clear_cache():
+    g = _sparse_weighted(4)
+    eng = AmpcEngine(seed=0)
+    sess = eng.session(g)
+    sess.solve("msf")
+    eng.clear_cache()
+    assert eng.cache_info(kind="snapshot").size == 0
+    assert sess.invalidate() == 0  # nothing left to evict, no miscount
+    assert sess.invalidate() == 0
+    res = sess.solve("msf")  # rebuilds cleanly after the clear
+    assert res.stats["snapshot"]["hit"] is False
+
+
+def test_alias_resolution_for_snapshot_support():
+    eng = AmpcEngine(seed=0)
+    sess = eng.session(gen.erdos_renyi(30, 3.0, seed=0))
+    # aliases resolve through the registry: canonical-name membership only
+    for name in ("cc", "connectivity", "mm", "1v2c", "ampc-mis", "mwm"):
+        assert sess._supported(name), name
+    # -mpc baselines and multi-launch variants must not claim support
+    for name in ("msf-mpc", "connectivity-mpc", "matching-mpc", "mis-mpc",
+                 "one-vs-two-mpc", "matching-levels", "msf-kkt",
+                 "matching-vertex-process"):
+        assert not sess._supported(name), name
+
+
+def test_snapshot_problems_are_registered_canonical_names():
+    names = {s.name for s in registry.specs()}
+    assert SNAPSHOT_PROBLEMS <= names

@@ -145,17 +145,55 @@ def test_batch_stats_record_bucket_and_cache_key():
 
 
 # --------------------------------------------------------------------------
+# msf: mixed dense/sparse lanes, full stats + ledger parity
+# --------------------------------------------------------------------------
+def _weighted_fleet():
+    # varied density so the fleet exercises BOTH msf paths: even graphs are
+    # sparse (truncated-Prim pipeline), odd ones dense (Borůvka shortcut)
+    fleet = []
+    for i in range(16):
+        g = gen.erdos_renyi(24 + 5 * i, 2.0 if i % 2 == 0 else 12.0, seed=i)
+        fleet.append(g.with_random_weights(seed=100 + i))
+    return fleet
+
+
+@pytest.mark.parametrize("backend", ["local", "routed"])
+def test_solve_many_msf_matches_sequential(backend):
+    fleet = _weighted_fleet()
+    eng = AmpcEngine(dht_backend=backend, seed=0)
+    batched = eng.solve_many(fleet, "msf")
+    paths = set()
+    for i, (g, res) in enumerate(zip(fleet, batched)):
+        want = eng.solve(g, "msf")
+        assert np.array_equal(res.output, want.output), f"graph {i}"
+        assert res.stats["path"] == want.stats["path"]
+        paths.add(res.stats["path"])
+        if res.stats["path"] == "sparse":
+            for k in ("queries", "pointer_jump_iters", "dense_phases",
+                      "contracted_vertices", "budget", "n_tern",
+                      "stop_cases"):
+                assert res.stats[k] == want.stats[k], (i, k)
+        # per-graph ledger attribution mirrors the sequential structure
+        for k in ("shuffles", "dht_queries", "dht_bytes",
+                  "dht_query_waves"):
+            assert res.ledger[k] == want.ledger[k], (i, k)
+    assert paths == {"sparse", "dense"}  # the fleet exercised both
+
+
+# --------------------------------------------------------------------------
 # fallback + result semantics
 # --------------------------------------------------------------------------
 def test_sequential_fallback_for_unbatched_problem():
-    assert get_problem("msf").batch_fn is None
-    fleet = [g.with_random_weights(i) for i, g in enumerate(_fleet()[:2])]
+    # msf/connectivity are batch-safe now; the multi-launch level algorithm
+    # still falls back to one sequential solve per graph
+    assert get_problem("msf").batch_fn is not None
+    assert get_problem("matching-levels").batch_fn is None
+    fleet = _fleet()[:2]
     eng = AmpcEngine(seed=0)
-    batched = eng.solve_many(fleet, "msf", skip_ternarize_if_dense=False)
+    batched = eng.solve_many(fleet, "matching-levels")
     for g, res in zip(fleet, batched):
-        want = eng.solve(g, "msf", skip_ternarize_if_dense=False)
+        want = eng.solve(g, "matching-levels")
         assert np.array_equal(res.output, want.output)
-        assert res.ledger["shuffles"] == 5  # the sequential Table-3 count
 
 
 def test_solve_many_validates_inputs():
